@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: wall-time measurement of jitted callables."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["time_fn", "rand", "emit"]
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time (µs) of ``fn(*args)`` under jit."""
+    jfn = jax.jit(fn)
+    for _ in range(warmup):
+        jax.block_until_ready(jfn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def rand(key, shape, dtype=np.float32):
+    rng = np.random.default_rng(key)
+    return jax.numpy.asarray(rng.standard_normal(shape), dtype)
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

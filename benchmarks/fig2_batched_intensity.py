@@ -1,0 +1,36 @@
+"""Fig. 2: achieved throughput of n GEMMs of size n×n.
+
+Paper compares BATCHEDGEMM implementations as arithmetic intensity grows.
+We compare a strided-batched evaluation (one fused batched dot) against a
+sequential loop of individual GEMMs (the pre-batched-BLAS world).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import rand, time_fn
+
+SIZES = (8, 16, 32, 64, 128, 256)
+
+
+def run():
+    rows = []
+    for n in SIZES:
+        A = rand(1, (n, n, n))
+        B = rand(2, (n, n, n))
+
+        def batched(a, b):
+            return jnp.einsum("bij,bjk->bik", a, b)
+
+        def looped(a, b):
+            outs = [a[i] @ b[i] for i in range(n)]
+            return jnp.stack(outs)
+
+        t_b = time_fn(batched, A, B)
+        t_l = time_fn(looped, A, B)
+        gflops = 2 * n**4 / (t_b * 1e-6) / 1e9
+        rows.append(
+            (f"fig2/batched_n{n}", t_b,
+             f"gflops={gflops:.1f};speedup_vs_loop={t_l / t_b:.2f}")
+        )
+    return rows

@@ -1,0 +1,28 @@
+"""Fig. 4: flattened single GEMM vs strided-batched evaluation for the
+flattenable cases 1.1, 1.5, 6.1 (paper heuristic 1: flatten when you can)."""
+
+from benchmarks.common import rand, time_fn
+from repro.core.contract import contract
+from repro.core.table2 import CASES
+
+SIZES = (32, 64, 128, 256)
+LABELS = ("1.1", "1.5", "6.1")
+
+
+def run():
+    rows = []
+    for label in LABELS:
+        rm = CASES[label].row_major()
+        a_modes, rest = rm.split(",")
+        b_modes, _ = rest.split("->")
+        for n in SIZES:
+            dims = {m: n for m in "mnpk"}
+            A = rand(1, [dims[m] for m in a_modes])
+            B = rand(2, [dims[m] for m in b_modes])
+            t_flat = time_fn(lambda a, b: contract(rm, a, b, strategy="flatten"), A, B)
+            t_batch = time_fn(lambda a, b: contract(rm, a, b, strategy="batched"), A, B)
+            rows.append(
+                (f"fig4/case{label}_n{n}", t_flat,
+                 f"flat_speedup_over_batched={t_batch / t_flat:.2f}")
+            )
+    return rows

@@ -1,0 +1,37 @@
+"""Figs. 5/6: speedup from batching the last output mode [p] vs the middle
+mode [n] (cases 1.1/2.1), and the mixed-mode variants (cases 1.2/2.2).
+
+Row-major mirror: the paper's [p] (last col-major C mode) is our *first*
+output mode, and [n] the middle — the locality argument transfers under
+the layout isomorphism.
+"""
+
+from benchmarks.common import rand, time_fn
+from repro.core.contract import contract
+from repro.core.table2 import CASES
+
+SIZES = (32, 64, 128, 256)
+
+
+def run():
+    rows = []
+    for label in ("1.1", "2.1", "1.2", "2.2"):
+        rm = CASES[label].row_major()
+        a_modes, rest = rm.split(",")
+        b_modes, _ = rest.split("->")
+        for n in SIZES:
+            dims = {m: n for m in "mnpk"}
+            A = rand(1, [dims[m] for m in a_modes])
+            B = rand(2, [dims[m] for m in b_modes])
+            try:
+                t_p = time_fn(lambda a, b: contract(
+                    rm, a, b, strategy="batched", force_batch="p"), A, B)
+                t_n = time_fn(lambda a, b: contract(
+                    rm, a, b, strategy="batched", force_batch="n"), A, B)
+            except ValueError:
+                continue  # case admits only one batching mode
+            rows.append(
+                (f"fig56/case{label}_n{n}", t_p,
+                 f"speedup_p_over_n={t_n / t_p:.2f}")
+            )
+    return rows

@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+``PYTHONPATH=src python -m benchmarks.run [--only fig9]``
+"""
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    "fig1_transpose_cost",
+    "fig2_batched_intensity",
+    "fig3_conventional_vs_sb",
+    "fig4_flatten_vs_batch",
+    "fig56_batch_mode",
+    "fig78_exceptional",
+    "fig9_tucker",
+    "table2_cases",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        try:
+            emit(mod.run())
+        except Exception:
+            failed.append(mod_name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

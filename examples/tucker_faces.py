@@ -1,0 +1,47 @@
+"""Tucker decomposition of a synthetic 'faces' tensor (paper §II-C).
+
+The paper motivates Tucker with TensorFaces: (pixels × expressions ×
+viewpoints).  We synthesize such a tensor with known multilinear rank,
+decompose it with HOOI on the transpose-free contraction engine, and
+compare against the conventional matricization baseline.
+
+Run: ``PYTHONPATH=src python examples/tucker_faces.py``
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tucker import hooi, tucker_reconstruct
+
+
+def synth_faces(key, pixels=256, expressions=24, views=18, ranks=(12, 6, 4)):
+    kg, ka, kb, kc, kn = jax.random.split(key, 5)
+    G = jax.random.normal(kg, ranks)
+    A = jnp.linalg.qr(jax.random.normal(ka, (pixels, ranks[0])))[0]
+    B = jnp.linalg.qr(jax.random.normal(kb, (expressions, ranks[1])))[0]
+    C = jnp.linalg.qr(jax.random.normal(kc, (views, ranks[2])))[0]
+    T = jnp.einsum("ijk,mi,nj,pk->mnp", G, A, B, C)
+    return T + 0.02 * jax.random.normal(kn, T.shape)
+
+
+def main():
+    T = synth_faces(jax.random.PRNGKey(0))
+    print(f"tensor: {T.shape}, decomposing to core (12, 6, 4)")
+
+    for strategy in ("auto", "conventional"):
+        t0 = time.perf_counter()
+        res = hooi(T, (12, 6, 4), n_iter=20, strategy=strategy)
+        jax.block_until_ready(res.core)
+        dt = time.perf_counter() - t0
+        print(f"  {strategy:>14}: rel_err={float(res.rel_error):.4f}  {dt:.2f}s")
+
+    recon = tucker_reconstruct(res.core, res.factors)
+    compression = T.size / (res.core.size + sum(f.size for f in res.factors))
+    print(f"compression ratio: {compression:.1f}x, "
+          f"reconstruction error {float(jnp.linalg.norm(T - recon) / jnp.linalg.norm(T)):.4f}")
+
+
+if __name__ == "__main__":
+    main()

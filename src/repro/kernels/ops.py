@@ -1,0 +1,131 @@
+"""Jit-ready wrappers around the Pallas kernels.
+
+``execute_plan(plan, A, B)`` is the Pallas backend of
+``repro.core.contract``: it pads operands to tile multiples (zero padding
+is exact for contractions), assigns mode→role for the kernel, lifts nested
+batch modes through ``jax.vmap`` (paper Listing 2's outer loops), and
+dispatches to :func:`sb_gemm_pallas` — with a 3D batch brick for the
+exceptional cases (the extended-transpose operation, see ``ext_gemm.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.notation import CaseKind
+from repro.core.planner import Plan
+from repro.kernels.sb_gemm import DEFAULT_TILES, sb_gemm_pallas
+
+__all__ = ["execute_plan", "sb_contract", "EXT_BATCH_TILE"]
+
+#: brick depth for the extended-transpose kernel (paper §III-E): how many
+#: stride-1-batched matrices are staged in VMEM per load.
+EXT_BATCH_TILE = 8
+
+
+def _pad_to(x, modes: str, targets: dict):
+    pads = [(0, targets[m] - d) for m, d in zip(modes, x.shape)]
+    if any(p for _, p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def _padded_dim(d: int, tile: int) -> int:
+    return d if d <= tile else -(-d // tile) * tile
+
+
+def sb_contract(
+    spec_a: str,
+    spec_b: str,
+    spec_c: str,
+    A,
+    B,
+    *,
+    roles: dict,
+    tiles: dict | None = None,
+    out_dtype=None,
+    interpret: bool = True,
+):
+    """Pad → kernel → slice for a core contraction (no nested modes)."""
+    tiles = {**DEFAULT_TILES, **(tiles or {})}
+    out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
+    dims = {}
+    for modes, x in ((spec_a, A), (spec_b, B)):
+        for m, d in zip(modes, x.shape):
+            dims[m] = d
+    targets = {m: _padded_dim(d, tiles[roles[m]]) for m, d in dims.items()}
+    A = _pad_to(A, spec_a, targets)
+    B = _pad_to(B, spec_b, targets)
+    out = sb_gemm_pallas(
+        A, B, a_modes=spec_a, b_modes=spec_b, c_modes=spec_c,
+        roles=roles, tiles=tiles, out_dtype=out_dtype, interpret=interpret,
+    )
+    slicer = tuple(slice(0, dims[m]) for m in spec_c)
+    return out[slicer]
+
+
+def execute_plan(plan: Plan, A, B, *, out_dtype=None, interpret: bool = True):
+    """Pallas-backend execution of a planner :class:`Plan`."""
+    fs, fd = plan.fspec, plan.fdims
+    out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
+
+    if "degenerate" in plan.notes:
+        from repro.core.contract import _direct
+
+        return _direct(plan.spec, A, B, jnp.float32).astype(out_dtype)
+
+    # flattening reshapes are views (adjacent modes, packed layout)
+    if plan.spec.a_modes != fs.a_modes:
+        A = A.reshape(tuple(fd[m] for m in fs.a_modes))
+    if plan.spec.b_modes != fs.b_modes:
+        B = B.reshape(tuple(fd[m] for m in fs.b_modes))
+
+    kgroup = fs.contracted
+    if len(kgroup) != 1:
+        # multi-mode contraction whose k-modes could not be fused into one
+        # view — no single MXU k axis exists; fall back to the XLA executor.
+        from repro.core.contract import _execute_xla
+
+        return _execute_xla(plan, A, B, jnp.float32).astype(out_dtype)
+
+    # mode → kernel role for the core problem
+    roles = {kgroup: "k"}
+    if plan.gemm_modes is not None:
+        u, v, _ = plan.gemm_modes
+        if u:
+            roles[u] = "u"
+        roles[v] = "v"
+    else:  # pure GEMM: assign from the (≤2-mode) output
+        cm = fs.c_modes
+        roles[cm[-1]] = "v"
+        if len(cm) == 2:
+            roles[cm[0]] = "u"
+    if plan.sb_batch:
+        roles[plan.sb_batch] = "b"
+
+    tiles = dict(DEFAULT_TILES)
+    if plan.kind == CaseKind.EXCEPTIONAL:
+        tiles["b"] = EXT_BATCH_TILE  # 3D brick: the extended transpose op
+
+    def core(a, b, a_modes, b_modes, c_modes):
+        return sb_contract(
+            a_modes, b_modes, c_modes, a, b,
+            roles=roles, tiles=tiles, out_dtype=out_dtype, interpret=interpret,
+        )
+
+    # nested batch modes → vmap at native positions (Listing 2 outer loops)
+    def build(a_modes: str, b_modes: str, c_modes: str, todo: str):
+        if not todo:
+            return lambda a, b: core(a, b, a_modes, b_modes, c_modes)
+        beta, rest = todo[0], todo[1:]
+        inner = build(
+            a_modes.replace(beta, ""), b_modes.replace(beta, ""),
+            c_modes.replace(beta, ""), rest,
+        )
+        in_a = a_modes.index(beta) if beta in a_modes else None
+        in_b = b_modes.index(beta) if beta in b_modes else None
+        return jax.vmap(inner, in_axes=(in_a, in_b), out_axes=c_modes.index(beta))
+
+    out = build(fs.a_modes, fs.b_modes, fs.c_modes, plan.nested)(A, B)
+    return out.reshape(tuple(plan.dims[m] for m in plan.spec.c_modes))

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references in
+``tests/test_kernels_*.py`` across shape/dtype sweeps (interpret mode on
+CPU; the kernels themselves target TPU).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ref_contract", "ref_sb_gemm", "ref_ext_gemm"]
+
+
+def ref_contract(spec: str, A, B, out_dtype=None):
+    """Oracle for any pairwise contraction: plain jnp.einsum in f32.
+
+    Inputs are upcast first (exact) — XLA:CPU lacks some mixed bf16 dot
+    thunks, and the oracle should be the highest-precision reference anyway.
+    """
+    out = jnp.einsum(
+        spec, A.astype(jnp.float32), B.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(out_dtype or jnp.result_type(A.dtype, B.dtype))
+
+
+def ref_sb_gemm(A, B, *, spec: str, out_dtype=None):
+    """Oracle for the StridedBatchedGEMM kernel (same einsum semantics —
+    the kernel's whole point is computing this without data movement)."""
+    return ref_contract(spec, A, B, out_dtype)
+
+
+def ref_ext_gemm(A, B, *, spec: str, out_dtype=None):
+    """Oracle for the extended-transpose (exceptional-case) kernel."""
+    return ref_contract(spec, A, B, out_dtype)

@@ -1,0 +1,153 @@
+"""StridedBatchedGEMM as a Pallas TPU kernel.
+
+The paper's primitive (Listing 1)::
+
+    C_p = alpha * opA(A + p*loa) @ opB(B + p*lob) + beta * C_p
+
+On TPU the ``lda/loa`` stride walk becomes a ``BlockSpec.index_map`` that
+reads HBM→VMEM tiles of each operand *in its native layout* — the batch
+mode may sit on any axis of any operand (or be absent: ``lo = 0`` broadcast
+batching).  No operand is ever re-materialized; "transposed" operands are
+handled by contracting the appropriate tile axes on the MXU
+(``jnp.einsum`` on VMEM tiles → ``dot_general`` with arbitrary dimension
+numbers), which is the TPU analogue of GEMM's ``op`` flags.
+
+The same kernel body covers the paper's *extended transpose* operation
+(§III-E): passing ``batch_tile > 1`` loads a 3D brick of the operand whose
+minor-most (stride-1) axis carries the batch — the paper's "3D tiling of B
+into cache" — so even the eight exceptional cases of Table II run without
+explicit transposition.  ``ext_gemm.py`` wraps that configuration.
+
+Grid: ``(batch, u_blocks, v_blocks, k_blocks)`` with k innermost; partial
+products accumulate in an f32 VMEM scratch tile and are emitted on the last
+k step (MXU-friendly: tiles padded to multiples of (8, 128) by ``ops.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are optional (interpret mode does not need them)
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+__all__ = ["sb_gemm_pallas", "DEFAULT_TILES"]
+
+#: role → tile size.  u/v are the GEMM free modes (v is C's minor-most mode
+#: → lane axis: 128 wide), k the contracted mode (128 for the MXU), b the
+#: batch walk (1 = classic sb_gemm; >1 = extended-transpose 3D brick).
+DEFAULT_TILES = {"u": 128, "v": 128, "k": 128, "b": 1}
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, tile_spec: str, nk: int, out_dtype,
+            upcast: bool):
+    """One grid step: accumulate a tile contraction into VMEM scratch."""
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a, b = a_ref[...], b_ref[...]
+    if upcast:  # interpret-on-CPU only: XLA:CPU lacks some bf16 dot thunks.
+        a, b = a.astype(jnp.float32), b.astype(jnp.float32)
+    acc_ref[...] += jnp.einsum(
+        tile_spec, a, b, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == nk - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def _block(modes: str, roles: dict, tiles: dict, dims: dict):
+    """BlockSpec for an operand with the given (core) mode string."""
+    shape = tuple(min(tiles[roles[m]], dims[m]) for m in modes)
+    sel = {"b": 0, "u": 1, "v": 2, "k": 3}
+
+    def index_map(b, i, j, kk, _modes=modes):
+        g = (b, i, j, kk)
+        return tuple(g[sel[roles[m]]] for m in _modes)
+
+    return pl.BlockSpec(shape, index_map), shape
+
+
+def sb_gemm_pallas(
+    A,
+    B,
+    *,
+    a_modes: str,
+    b_modes: str,
+    c_modes: str,
+    roles: dict,
+    tiles: dict | None = None,
+    out_dtype=None,
+    interpret: bool = True,
+):
+    """Single-call strided-batched contraction of ``A`` and ``B``.
+
+    ``a_modes/b_modes/c_modes`` are the *core* mode strings (one optional
+    batch mode ``b``, GEMM modes ``u``/``v``, contracted mode ``k`` — as
+    assigned by ``roles: {mode: role}``).  All mode dims must already be
+    padded to multiples of the role tiles (``ops.py`` does this).
+
+    ``interpret=True`` runs the kernel body on CPU for validation; on real
+    TPUs pass ``interpret=False``.
+    """
+    tiles = {**DEFAULT_TILES, **(tiles or {})}
+    out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
+    dims: dict = {}
+    for modes, x in ((a_modes, A), (b_modes, B)):
+        for m, d in zip(modes, x.shape):
+            dims[m] = d
+    kmode = next(m for m, r in roles.items() if r == "k")
+    bmode = next((m for m, r in roles.items() if r == "b"), None)
+
+    a_spec, _ = _block(a_modes, roles, tiles, dims)
+    b_spec, _ = _block(b_modes, roles, tiles, dims)
+    c_spec, c_block = _block(c_modes, roles, tiles, dims)
+
+    def blocks(mode):
+        t = min(tiles[roles[mode]], dims[mode])
+        assert dims[mode] % t == 0, (mode, dims[mode], t)
+        return dims[mode] // t
+
+    umode = next((m for m, r in roles.items() if r == "u" and m in c_modes), None)
+    vmode = next((m for m, r in roles.items() if r == "v"), None)
+    grid = (
+        blocks(bmode) if bmode else 1,
+        blocks(umode) if umode else 1,
+        blocks(vmode) if vmode else 1,
+        blocks(kmode),
+    )
+    nk = grid[3]
+    out_shape = jax.ShapeDtypeStruct(tuple(dims[m] for m in c_modes), out_dtype)
+    tile_spec = f"{a_modes},{b_modes}->{c_modes}"
+
+    kwargs = {}
+    if pltpu is not None and not interpret:  # pragma: no cover (TPU only)
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        )
+
+    scratch = (
+        pltpu.VMEM(c_block, jnp.float32)
+        if pltpu is not None
+        else pl.BlockSpec(memory_space=None)
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, tile_spec=tile_spec, nk=nk, out_dtype=out_dtype,
+                          upcast=interpret and A.dtype != jnp.float32),
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=c_spec,
+        out_shape=out_shape,
+        scratch_shapes=[scratch],
+        interpret=interpret,
+        **kwargs,
+    )(A, B)

@@ -1,0 +1,297 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the scale proof for the production meshes — 16×16 (one 256-chip
+pod) and 2×16×16 (two pods, 512 chips).  Everything is abstract
+(ShapeDtypeStruct): no parameter or activation memory is ever allocated;
+``compiled.memory_analysis()`` certifies the per-device footprint and
+``cost_analysis()`` + HLO collective parsing feed §Roofline.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minicpm-2b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import functools
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable_shapes
+from repro.distributed.sharding import ShardingRules, use_rules
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import (
+    batch_logical_axes,
+    cache_logical_axes,
+    opt_state_logical_axes,
+    param_logical_axes,
+    tree_shardings,
+)
+from repro.models.transformer import decode_step, forward, init_cache, init_params, lm_loss, prefill
+from repro.training.data import make_batch_specs
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for kind in COLLECTIVES:
+            # match '= <shape> kind(' and fused variants like all-reduce-start
+            if f" {kind}(" in s or f" {kind}-start(" in s:
+                m = _SHAPE_RE.search(s.split("=", 1)[0]) or _SHAPE_RE.search(s)
+                if not m:
+                    continue
+                total = 0
+                # tuple shapes: sum every component on the line's LHS
+                lhs = s.split(" = ", 1)[-1]
+                for dt, dims in _SHAPE_RE.findall(lhs.split("(", 1)[0]):
+                    if dt not in _DTYPE_BYTES:
+                        continue
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    total += n * _DTYPE_BYTES[dt]
+                out[kind] += total
+                counts[kind] += 1
+                break
+    out["counts"] = counts
+    return out
+
+
+# ----------------------------------------------------------------- presets
+def arch_preset(cfg):
+    """Scale-dependent training preset (documented in DESIGN.md §5)."""
+    if cfg.param_count() > 5e11:  # kimi-k2: bf16 master + bf16 moments
+        cfg = cfg.with_(param_dtype="bfloat16")
+        opt = AdamWConfig(moment_dtype="bfloat16")
+    else:
+        opt = AdamWConfig()
+    return cfg, opt
+
+
+def shape_rules_overrides(cfg, shape: ShapeSpec) -> dict:
+    over = {}
+    if shape.kind == "decode":
+        if shape.global_batch < 32:
+            # long_500k: batch unshardable — put everything on the KV seq
+            over["batch"] = None
+            over["kv_seq"] = ("data", "model")
+    return over
+
+
+# ------------------------------------------------------------------- steps
+def make_train_step(cfg, opt_cfg):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            functools.partial(lm_loss, cfg), has_aux=True
+        )(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_serve_step(cfg):
+    def serve_step(params, cache, batch):
+        return decode_step(cfg, params, cache, batch["tokens"])
+
+    return serve_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch, cache):
+        return prefill(cfg, params, batch, cache)
+
+    return prefill_step
+
+
+# ----------------------------------------------------------------- dry run
+def input_specs(cfg, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), np.int32)}
+    return make_batch_specs(cfg, shape)
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                rules_overrides: dict | None = None, verbose: bool = True,
+                cfg_overrides: dict | None = None):
+    """Lower + compile one (arch × shape × mesh) cell; return the record."""
+    cfg = get_config(arch, **(cfg_overrides or {}))
+    shape = SHAPES[shape_name]
+    app = applicable_shapes(cfg)
+    if app[shape_name] is None:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": _skip_reason(cfg, shape_name)}
+
+    cfg, opt_cfg = arch_preset(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    over = shape_rules_overrides(cfg, shape)
+    over.update(rules_overrides or {})
+    rules = ShardingRules(mesh, over)
+
+    key = jax.random.PRNGKey(0)
+    p_spec = jax.eval_shape(lambda: init_params(key, cfg))
+    p_sh = tree_shardings(rules, param_logical_axes(p_spec), p_spec)
+    b_spec = input_specs(cfg, shape)
+    b_sh = tree_shardings(rules, batch_logical_axes(b_spec), b_spec)
+
+    t0 = time.time()
+    with mesh, use_rules(rules):
+        if shape.kind == "train":
+            o_spec = jax.eval_shape(lambda: adamw_init(
+                p_spec, jnp.dtype(opt_cfg.moment_dtype)))
+            o_sh = tree_shardings(rules, opt_state_logical_axes(p_spec), o_spec)
+            step = make_train_step(cfg, opt_cfg)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(p_spec, o_spec, b_spec)
+        elif shape.kind == "prefill":
+            cache_len = shape.seq_len + (
+                cfg.frontend.n_positions
+                if cfg.frontend and cfg.frontend.kind == "vision" else 0
+            )
+            c_spec = jax.eval_shape(
+                lambda: init_cache(cfg, shape.global_batch, cache_len)
+            )
+            c_sh = tree_shardings(rules, cache_logical_axes(c_spec), c_spec)
+            step = make_prefill_step(cfg)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, b_sh, c_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,),
+            ).lower(p_spec, b_spec, c_spec)
+        else:  # decode
+            c_spec = jax.eval_shape(
+                lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            c_sh = tree_shardings(rules, cache_logical_axes(c_spec), c_spec)
+            step = make_serve_step(cfg)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, b_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            ).lower(p_spec, c_spec, b_spec)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "multi_pod": multi_pod,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "peak_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "collective_bytes": {k: v for k, v in coll.items() if k != "counts"},
+        "collective_counts": coll["counts"],
+        "params": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+    }
+    if verbose:
+        print(json.dumps(record))
+        print("memory_analysis:", mem)
+    return record
+
+
+def _skip_reason(cfg, shape_name: str) -> str:
+    if cfg.encoder_only:
+        return "encoder-only arch: no autoregressive decode step exists"
+    return "long_500k requires sub-quadratic attention; this arch is full-attention"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) on both meshes")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    from repro.configs import list_archs
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip existing] {tag}")
+            continue
+        print(f"[dryrun] {tag}")
+        try:
+            rec = dryrun_cell(arch, shape, multi_pod=mp)
+        except Exception as e:  # a failure here is a bug in the system
+            rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                   "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+            print(json.dumps(rec))
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

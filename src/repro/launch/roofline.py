@@ -1,0 +1,221 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Roofline analysis from the compiled dry-run artifacts (§Roofline).
+
+Terms per (arch × shape) on the single-pod mesh (v5e constants):
+
+    compute    = HLO_FLOPs_per_chip / 197e12            [s]
+    memory     = HLO_bytes_per_chip / 819e9             [s]
+    collective = collective_bytes_per_chip / 50e9       [s]
+
+XLA's ``cost_analysis`` counts a ``while``-loop (lax.scan) body ONCE
+regardless of trip count (verified empirically), so every term is
+corrected by lowering one scan-period body separately under identical
+shardings:  corrected = module + (n_periods - 1) × body.
+
+MODEL_FLOPS uses 6·N·D for training (2·N·D for inference), N = active
+params for MoE; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy
+overhead.
+"""
+
+import argparse
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.distributed.sharding import ShardingRules, use_rules
+from repro.launch.dryrun import (
+    arch_preset,
+    collective_bytes,
+    dryrun_cell,
+    shape_rules_overrides,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import param_logical_axes, tree_shardings
+from repro.models.transformer import _block, init_params
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+__all__ = ["roofline_cell", "body_costs", "PEAK_FLOPS", "HBM_BW", "LINK_BW"]
+
+
+def _sum_collectives(coll: dict) -> int:
+    return sum(v for k, v in coll.items() if k != "counts")
+
+
+def body_costs(arch: str, shape_name: str, cfg_overrides: dict | None = None):
+    """Lower one scan-period body (fwd, or fwd+bwd for train) under the
+    production shardings; return its per-device cost terms."""
+    cfg0 = get_config(arch, **(cfg_overrides or {}))
+    cfg, _ = arch_preset(cfg0)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    rules = ShardingRules(mesh, shape_rules_overrides(cfg, shape))
+
+    key = jax.random.PRNGKey(0)
+    p_spec = jax.eval_shape(lambda: init_params(key, cfg))
+    p_sh = tree_shardings(rules, param_logical_axes(p_spec), p_spec)
+    period_spec = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), p_spec["pattern"]
+    )
+    period_sh = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(*s.spec[1:])
+        ),
+        p_sh["pattern"],
+    )
+
+    B = shape.global_batch
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    dt = cfg.activation_dtype()
+    x_spec = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+    x_sh = rules.sharding(("batch", "seq_sharded" if S > 1 else None, None))
+    positions = jnp.arange(S) if shape.kind != "decode" else None
+
+    def period_fwd(x, pp):
+        pos = jnp.arange(x.shape[1])
+        for spec, p in zip(cfg.pattern, pp):
+            x, _, _ = _block(cfg, spec, p, x, positions=pos)
+        return x
+
+    if shape.kind == "train":
+        fn = lambda x, pp: jnp.sum(
+            jax.checkpoint(period_fwd)(x, pp).astype(jnp.float32)
+        )
+        fn = jax.grad(fn, argnums=(0, 1))
+    else:
+        fn = period_fwd
+        if shape.kind == "decode":
+            # decode body: attention layers read their full KV cache; lower
+            # with the cache slices for one period.
+            from repro.models.transformer import init_cache
+
+            cfg1 = cfg.with_(n_periods=1, prefix=())
+            c_full = jax.eval_shape(lambda: init_cache(cfg1, B, shape.seq_len))
+            from repro.launch.shardings import cache_logical_axes
+
+            c_sh_full = tree_shardings(
+                rules, cache_logical_axes(c_full), c_full
+            )
+            c_spec = [jax.tree.map(lambda l: jax.ShapeDtypeStruct(
+                l.shape[1:], l.dtype), c) for c in c_full["pattern"]]
+            c_sh = [jax.tree.map(lambda s: jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(*s.spec[1:])), c)
+                for c in c_sh_full["pattern"]]
+
+            def decode_body(x, pp, caches):
+                pos = caches[0]["length"][None] if "length" in caches[0] else jnp.zeros(1, jnp.int32)
+                for j, spec in enumerate(cfg.pattern):
+                    x, _, _ = _block(cfg, spec, pp[j], x, positions=pos,
+                                     cache=caches[j])
+                return x
+
+            with mesh, use_rules(rules):
+                lowered = jax.jit(
+                    decode_body, in_shardings=(x_sh, period_sh, c_sh)
+                ).lower(x_spec, period_spec, c_spec)
+                compiled = lowered.compile()
+            return _costs_of(compiled)
+
+    with mesh, use_rules(rules):
+        lowered = jax.jit(fn, in_shardings=(x_sh, period_sh)).lower(
+            x_spec, period_spec
+        )
+        compiled = lowered.compile()
+    return _costs_of(compiled)
+
+
+def _costs_of(compiled):
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "collective": _sum_collectives(coll),
+    }
+
+
+def roofline_cell(arch: str, shape_name: str, record: dict, *, body=None,
+                  cfg_overrides: dict | None = None):
+    """Combine a dry-run record + body costs into the three roofline terms."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    P = cfg.n_periods
+    body = body or body_costs(arch, shape_name, cfg_overrides)
+
+    flops = record["flops"] + (P - 1) * body["flops"]
+    bytes_ = record["bytes_accessed"] + (P - 1) * body["bytes"]
+    coll = _sum_collectives(record["collective_bytes"]) + (P - 1) * body["collective"]
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_collective = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+
+    chips = 512 if record.get("multi_pod") else 256
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    n_active = cfg.param_count(active_only=True)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * n_active * tokens
+    hlo_total = flops * chips
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    # roofline fraction: useful model flops per chip-second at the bound
+    t_bound = max(terms.values())
+    mfu_bound = (model_flops / chips / PEAK_FLOPS) / t_bound if t_bound else 0.0
+
+    return {
+        "arch": arch, "shape": shape_name, "chips": chips,
+        "flops_per_chip": flops, "bytes_per_chip": bytes_,
+        "collective_bytes_per_chip": coll,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_collective, "bottleneck": bottleneck,
+        "model_flops": model_flops, "useful_flops_ratio": useful,
+        "roofline_fraction": mfu_bound,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--arch", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    for fname in sorted(os.listdir(args.dryrun_dir)):
+        if not fname.endswith(".json") or "2x16x16" in fname:
+            continue  # roofline table is single-pod per the assignment
+        with open(os.path.join(args.dryrun_dir, fname)) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        if args.arch and rec["arch"] != args.arch:
+            continue
+        print(f"[roofline] {rec['arch']} × {rec['shape']}")
+        try:
+            row = roofline_cell(rec["arch"], rec["shape"], rec)
+        except Exception as e:
+            row = {"arch": rec["arch"], "shape": rec["shape"],
+                   "error": f"{type(e).__name__}: {e}"}
+        rows.append(row)
+        print(json.dumps(row))
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

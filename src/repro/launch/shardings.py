@@ -1,0 +1,190 @@
+"""Parameter / cache / batch logical-axis assignment for pjit.
+
+Walks the pytrees produced by ``models.transformer`` and assigns each leaf
+a tuple of logical axis names, resolved to a ``NamedSharding`` through
+:class:`repro.distributed.sharding.ShardingRules`.  Rules are keyed on
+``(parent, leaf_name)`` path suffixes; leaves living under the scanned
+``pattern`` stack carry one extra leading (period) axis, which is never
+sharded.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.distributed.sharding import ShardingRules
+
+__all__ = [
+    "param_logical_axes", "cache_logical_axes", "batch_logical_axes",
+    "tree_shardings", "opt_state_logical_axes",
+]
+
+# (parent, name) → logical axes of the *unstacked* leaf
+_RULES: dict[tuple[str, str], tuple] = {
+    ("", "embed"): ("vocab", "d_model"),
+    ("", "lm_head"): ("d_model", "vocab"),
+    ("", "final_norm"): (None,),
+    ("frontend", "proj"): (None, None),
+    ("attn", "wq"): (None, "heads"),
+    ("attn", "wk"): (None, "kv_heads"),
+    ("attn", "wv"): (None, "kv_heads"),
+    ("attn", "wo"): ("heads", None),
+    ("mlp", "wi"): (None, "ff"),
+    ("mlp", "wg"): (None, "ff"),
+    ("mlp", "wo"): ("ff", None),
+    ("moe", "router"): (None, None),
+    ("moe", "wi"): ("expert", None, "expert_ff"),
+    ("moe", "wg"): ("expert", None, "expert_ff"),
+    ("moe", "wo"): ("expert", "expert_ff", None),
+    ("shared", "wi"): (None, None, "ff"),
+    ("shared", "wg"): (None, None, "ff"),
+    ("shared", "wo"): (None, "ff", None),
+    ("mamba", "in_proj"): (None, "ff"),
+    ("mamba", "conv_w"): (None, "ff"),
+    ("mamba", "conv_b"): ("ff",),
+    ("mamba", "A_log"): ("heads",),
+    ("mamba", "D"): ("heads",),
+    ("mamba", "dt_bias"): ("heads",),
+    ("mamba", "norm"): ("ff",),
+    ("mamba", "out_proj"): ("ff", None),
+}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            out.append(f"[{k.idx}]")
+    return out
+
+
+def _lookup(path, leaf) -> tuple:
+    names = [n for n in _path_names(path) if not n.startswith("[")]
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    base = _RULES.get((parent, name))
+    if base is None:
+        base = _RULES.get(("", name))
+    if base is None:
+        if name.startswith("norm"):
+            base = (None,) * leaf.ndim
+        else:
+            raise KeyError(f"no sharding rule for param path {names}")
+    # scanned-pattern stacking adds exactly one leading (period) axis
+    while len(base) < leaf.ndim:
+        base = (None,) + base
+    assert len(base) == leaf.ndim, (names, base, leaf.shape)
+    return base
+
+
+def param_logical_axes(params):
+    """Tree of logical-axis tuples matching the params tree."""
+    return jax.tree_util.tree_map_with_path(_lookup, params)
+
+
+def opt_state_logical_axes(params, *, zero1: bool = True):
+    """AdamW state: moments mirror the params; step is replicated.
+
+    With ``zero1=True`` (default for the production mesh) each moment leaf
+    additionally shards its first unsharded dim over the ``zero1`` logical
+    axis (→ data): optimizer state is fully partitioned (ZeRO-1), GSPMD
+    turns the gradient all-reduce into reduce-scatter + the param update
+    into an all-gather — the standard distributed-optimizer layout.
+    """
+    p_axes = param_logical_axes(params)
+    if zero1:
+
+        def z(axes):
+            axes = tuple(axes)
+            # never zero1 the leading scan-period axis (rank > base rank):
+            # its trip count (e.g. 60 layers) rarely divides the mesh, and
+            # claiming `data` there starves the real weight dims.
+            start = 1 if len(axes) >= 3 else 0
+            for i in range(start, len(axes)):
+                if axes[i] is None:
+                    return axes[:i] + ("zero1",) + axes[i + 1:]
+            return axes
+
+        m_axes = jax.tree.map(z, p_axes, is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        m_axes = p_axes
+    return {"mu": m_axes, "nu": m_axes, "step": ()}
+
+
+def cache_logical_axes(cache):
+    """Decode-cache tree: KV pages, SSM state, length counters."""
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        name = next((n for n in reversed(names) if not n.startswith("[")), "")
+        if name == "length":
+            return ()
+        if name in ("k", "v"):
+            base = ("batch", "kv_seq", "kv_heads", None)
+        elif name in ("k_scale", "v_scale"):
+            base = ("batch", "kv_seq", "kv_heads")
+        elif name == "conv":
+            base = ("batch", None, "ff")
+        elif name == "state":
+            base = ("batch", "heads", None, None)
+        else:
+            raise KeyError(f"no cache rule for {names}")
+        while len(base) < leaf.ndim:
+            base = (None,) + base
+        return base
+
+    return jax.tree_util.tree_map_with_path(assign, cache)
+
+
+def batch_logical_axes(batch):
+    """Input batch: tokens/labels (B, S); features (B, S, D)."""
+
+    def assign(path, leaf):
+        return ("batch",) + (None,) * (leaf.ndim - 1)
+
+    return jax.tree_util.tree_map_with_path(assign, batch)
+
+
+def tree_shardings(rules: ShardingRules, axes_tree, spec_tree=None):
+    """Logical-axes tree → NamedSharding tree.
+
+    With ``spec_tree`` (matching ShapeDtypeStructs) the resolution is
+    size-aware: a mesh axis that does not divide the dimension is dropped
+    (pjit *arguments* require exact divisibility).  E.g. qwen2's 60 experts
+    don't divide a 16-way axis → the expert stack falls back to replicated,
+    recorded rather than crashed.
+    """
+    axis_sizes = dict(
+        zip(rules.mesh.axis_names, rules.mesh.devices.shape)
+    )
+
+    def resolve(axes, spec=None):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        pspec = rules.physical(tuple(axes))
+        if spec is None:
+            return NamedSharding(rules.mesh, pspec)
+        parts = list(pspec) + [None] * (len(spec.shape) - len(pspec))
+        fixed = []
+        for dim, entry in zip(spec.shape, parts):
+            if entry is None:
+                fixed.append(None)
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            while names:
+                prod = 1
+                for nm in names:
+                    prod *= axis_sizes[nm]
+                if dim % prod == 0:
+                    break
+                names = names[:-1]  # drop the innermost axis and retry
+            fixed.append(tuple(names) if len(names) > 1 else (names[0] if names else None))
+        return NamedSharding(rules.mesh, P(*fixed))
+
+    is_leaf = lambda x: isinstance(x, tuple)
+    if spec_tree is None:
+        return jax.tree.map(resolve, axes_tree, is_leaf=is_leaf)
+    return jax.tree.map(resolve, axes_tree, spec_tree, is_leaf=is_leaf)

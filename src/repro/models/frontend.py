@@ -1,0 +1,35 @@
+"""Modality frontends — STUBS per the assignment.
+
+``[vlm]``/``[audio]`` architectures specify the transformer backbone only;
+``input_specs()`` provides *precomputed* patch/frame embeddings.  The stub
+is a single linear projection into the backbone width (the real InternViT /
+HuBERT conv feature extractor is out of scope by design).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FrontendConfig, ModelConfig
+from repro.models.layers import dense, init_dense
+
+__all__ = ["init_frontend", "apply_frontend"]
+
+
+def init_frontend(key, cfg: ModelConfig):
+    fe: FrontendConfig = cfg.frontend
+    return {"proj": init_dense(key, fe.feature_dim, cfg.d_model,
+                               jnp.dtype(cfg.param_dtype))}
+
+
+def apply_frontend(cfg: ModelConfig, params, features, text_embeds=None):
+    """features: (B, n_positions, feature_dim) → backbone embeddings.
+
+    For VLM the projected patch tokens are prepended to the text embeds;
+    for audio they *are* the sequence.
+    """
+    x = dense(cfg, features, params["proj"], "bpf,fe->bpe")
+    if text_embeds is not None:
+        x = jnp.concatenate([x.astype(text_embeds.dtype), text_embeds], axis=1)
+    return x

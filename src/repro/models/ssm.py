@@ -1,0 +1,212 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked for TPU.
+
+The SSD algorithm evaluates a selective state-space model as a sequence of
+*per-chunk batched GEMMs* plus a tiny inter-chunk scan — which is exactly
+the regime the paper targets: many small/medium GEMMs walked at constant
+stride (batch modes = (batch, chunk, head)).  All heavy contractions route
+through ``repro.core.contract``.
+
+Decode is O(1) in sequence length: the recurrent state (B, H, P, N) *is*
+the "KV cache", which is why ``long_500k`` runs on the SSM/hybrid archs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.core.contract import contract
+from repro.distributed.sharding import logical
+from repro.models.layers import init_dense, rms_norm
+
+__all__ = ["init_mamba", "mamba_mixer", "mamba_decode_step", "init_ssm_cache"]
+
+
+def _ctr(cfg: ModelConfig):
+    return functools.partial(
+        contract, strategy=cfg.contract_strategy, backend=cfg.contract_backend
+    )
+
+
+def _dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    heads = d_in // s.headdim
+    return s, d_in, heads
+
+
+def init_mamba(key, cfg: ModelConfig):
+    s, d_in, heads = _dims(cfg)
+    E = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # projects to [z (gate), x, B, C, dt]
+        "in_proj": init_dense(k1, E, 2 * d_in + 2 * s.n_groups * s.d_state + heads, dt),
+        "conv_w": (jax.random.normal(k2, (s.conv_kernel, conv_dim)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((heads,), 0.01))).astype(jnp.float32),
+        "norm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": init_dense(k4, d_in, E, dt),
+    }
+
+
+def _split_proj(cfg, proj):
+    s, d_in, heads = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [d_in + 2 * gn], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, w, b, cache=None):
+    """Depthwise causal conv1d over (B, L, C).  Returns (y, new_cache)."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = cache
+    full = jnp.concatenate([pad, xbc], axis=1)
+    # windowed sum: y[t] = Σ_k w[k] · x[t - (K-1) + k]
+    y = sum(full[:, i : i + xbc.shape[1]] * w[i] for i in range(K))
+    new_cache = full[:, -(K - 1):] if K > 1 else pad[:, :0]
+    return jax.nn.silu(y + b), new_cache
+
+
+def mamba_mixer(cfg: ModelConfig, params, x, *, positions=None, kv_cache=None):
+    """Full-sequence SSD forward.  x: (B, L, E) → (B, L, E).
+
+    If ``kv_cache`` is given (dict with conv/ssm state), runs as a
+    single-step decode (L == 1 expected) via the recurrent form.
+    """
+    if kv_cache is not None:
+        return mamba_decode_step(cfg, params, x, kv_cache)
+    ctr = _ctr(cfg)
+    s, d_in, heads = _dims(cfg)
+    B, L, E = x.shape
+    G, N, P = s.n_groups, s.d_state, s.headdim
+    Q = min(s.chunk, L)
+    while L % Q:
+        Q -= 1  # largest chunk dividing L (configs use powers of two)
+    nc = L // Q
+
+    proj = ctr("ble,ef->blf", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, _ = _causal_conv(xbc, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype))
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B, L, heads, P)
+    Bm = Bm.reshape(B, L, G, N)
+    Cm = Cm.reshape(B, L, G, N)
+    xs = logical(xs, "batch", None, "heads", None)
+
+    A = -jnp.exp(params["A_log"])                                   # (H,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+
+    # ---- chunked SSD ---------------------------------------------------
+    # reshape to (B, nc, Q, ...): views, no copies
+    xs_c = xs.reshape(B, nc, Q, heads, P)
+    B_c = Bm.reshape(B, nc, Q, G, N).astype(jnp.float32)
+    C_c = Cm.reshape(B, nc, Q, G, N).astype(jnp.float32)
+    dt_c = dt.reshape(B, nc, Q, heads)
+
+    dA = dt_c * A  # (B,nc,Q,H)
+    seg = jnp.cumsum(dA, axis=2)                                    # s_i
+    # intra-chunk kernel: Lmat[i,j] = exp(s_i - s_j) · dt_j  for i ≥ j
+    diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]            # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    Lmat = Lmat * dt_c[:, :, None, :, :]                            # apply dt_j
+
+    # CBt[b,c,i,j,g] = C_i · B_j   (batched GEMM over (b, c, g))
+    CBt = ctr("bcign,bcjgn->bcijg", C_c, B_c)
+    # heads-per-group: head h = g·HpG + r, matching the repeat() convention
+    HpG = heads // G
+    Lh = Lmat.reshape(B, nc, Q, Q, G, HpG)
+    W = CBt[..., None] * Lh                       # (B, nc, i, j, G, HpG)
+    # fold (G, HpG) → H on the last axes and contract j against x_j
+    W = W.reshape(B, nc, Q, Q, heads).astype(x.dtype)
+    y_intra = ctr("bcijh,bcjhp->bcihp", W, xs_c)
+
+    # ---- inter-chunk state passing --------------------------------------
+    # chunk state: S_c = Σ_j exp(s_Q - s_j) dt_j · B_j ⊗ x_j   (B,nc,H,N,P)
+    decay_out = jnp.exp(seg[:, :, -1:, :] - seg) * dt_c             # (B,nc,Q,H)
+    Bx = B_c[:, :, :, :, None, :].repeat(HpG, 4).reshape(B, nc, Q, heads, N)
+    contrib = (Bx * decay_out[..., None]).astype(x.dtype)
+    S = ctr("bcjhn,bcjhp->bchnp", contrib, xs_c)                    # per-chunk state
+
+    # scan chunks: running = running · exp(Σ dA) + S_c
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))                      # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        s_c, d_c = inp
+        new = carry * d_c[:, :, None, None].astype(x.dtype) + s_c
+        return new, carry  # emit state *before* this chunk
+
+    init = jnp.zeros((B, heads, N, P), x.dtype)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                   # (B,nc,H,N,P)
+
+    # y_inter[i] = exp(s_i) · C_i · S_prev
+    Ch = C_c[:, :, :, :, None, :].repeat(HpG, 4).reshape(B, nc, Q, heads, N)
+    Ch = (Ch * jnp.exp(seg)[..., None]).astype(x.dtype)
+    y_inter = ctr("bcihn,bchnp->bcihp", Ch, prev_states)
+
+    y = (y_intra + y_inter).reshape(B, L, heads, P)
+    y = y + xs * params["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, L, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)
+    out = ctr("bld,de->ble", y, params["out_proj"].astype(x.dtype))
+    return logical(out, "batch", "seq_sharded", None), None
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    s, d_in, heads = _dims(cfg)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, heads, s.d_state, s.headdim), dtype),
+    }
+
+
+def mamba_decode_step(cfg: ModelConfig, params, x, cache):
+    """Recurrent single-token step.  x: (B, 1, E)."""
+    ctr = _ctr(cfg)
+    s, d_in, heads = _dims(cfg)
+    B, L, E = x.shape
+    G, N, P = s.n_groups, s.d_state, s.headdim
+
+    proj = ctr("ble,ef->blf", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, new_conv = _causal_conv(
+        xbc, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype),
+        cache["conv"],
+    )
+    xs, Bm, Cm = jnp.split(xbc[:, -1], [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B, heads, P)
+    HpG = heads // G
+    Bm = Bm.reshape(B, G, N).repeat(HpG, 1).reshape(B, heads, N)
+    Cm = Cm.reshape(B, G, N).repeat(HpG, 1).reshape(B, heads, N)
+
+    A = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt_raw[:, -1].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    decay = jnp.exp(dt * A).astype(x.dtype)                          # (B,H)
+
+    # S ← decay · S + dt · B ⊗ x
+    outer = (Bm * dt[..., None]).astype(x.dtype)
+    new_state = cache["state"] * decay[:, :, None, None] + (
+        outer[:, :, :, None] * xs[:, :, None, :]
+    )
+    y = ctr("bhn,bhnp->bhp", Cm.astype(x.dtype), new_state)
+    y = y + xs * params["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(B, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)
+    out = ctr("bld,de->ble", y, params["out_proj"].astype(x.dtype))
+    return out, {"conv": new_conv, "state": new_state}

@@ -1,0 +1,189 @@
+"""Fault-tolerant training loop.
+
+Production posture:
+
+* pjit'd train step with logical shardings (DP/TP/EP/SP) from
+  ``distributed.sharding``; gradient accumulation over microbatches;
+* checkpoint/restart (atomic, manifest-driven) including data cursor and
+  optimizer step;
+* straggler mitigation — per-step deadline; steps that exceed it are
+  logged and counted (on real fleets this hooks the preemption signal and
+  triggers hot-spare swap; here the policy layer is implemented and unit
+  tested, the detection source is wall-clock);
+* optional gradient compression (bf16 / int8+error-feedback) applied to
+  the cross-replica gradient;
+* elastic rescale — ``Trainer.restore`` re-places every leaf onto the
+  current mesh whatever its previous mesh was.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.compress import Int8Compressor, compress_bf16
+from repro.distributed.sharding import ShardingRules, use_rules
+from repro.models.transformer import lm_loss
+from repro.training.checkpoint import Checkpointer
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, make_schedule
+
+log = logging.getLogger("repro.trainer")
+
+__all__ = ["TrainConfig", "Trainer", "make_train_step"]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    microbatches: int = 1              # gradient accumulation
+    remat: bool = True
+    compression: str | None = None     # None | "bf16" | "int8"
+    step_deadline_s: float | None = None  # straggler threshold
+    ckpt_dir: str | None = None
+    ckpt_every: int = 100
+    ckpt_keep: int = 3
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, compressor=None):
+    """Build the (jit-able) train step: grads (+accum) → compress → AdamW."""
+    schedule = make_schedule(tcfg.opt)
+
+    def loss_fn(params, batch):
+        return lm_loss(cfg, params, batch, remat=tcfg.remat)
+
+    def train_step(params, opt_state, batch, residual=None):
+        if tcfg.microbatches > 1:
+            # split batch leading dim into microbatches; accumulate grads
+            def micro(batch, i):
+                return jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // tcfg.microbatches),
+                        x.shape[0] // tcfg.microbatches, 0),
+                    batch,
+                )
+
+            def acc_fn(carry, i):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, micro(batch, i)
+                )
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_fn, (zeros, 0.0), jnp.arange(tcfg.microbatches)
+            )
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+            loss = lsum / tcfg.microbatches
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+
+        new_residual = residual
+        if tcfg.compression == "bf16":
+            grads = compress_bf16(grads)
+        elif tcfg.compression == "int8":
+            grads, new_residual = compressor.compress(grads, residual)
+
+        params, opt_state, opt_metrics = adamw_update(
+            tcfg.opt, params, grads, opt_state, schedule=schedule
+        )
+        out_metrics = {"loss": loss, **opt_metrics}
+        if metrics:
+            out_metrics.update({k: v for k, v in metrics.items()})
+        return params, opt_state, new_residual, out_metrics
+
+    return train_step
+
+
+class Trainer:
+    """Owns params/opt-state/data and runs the fault-tolerant loop."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, params, data,
+                 rules: ShardingRules | None = None):
+        self.cfg, self.tcfg, self.data = cfg, tcfg, data
+        self.params = params
+        self.opt_state = adamw_init(params)
+        self.rules = rules
+        self.compressor = Int8Compressor() if tcfg.compression == "int8" else None
+        self.residual = (
+            self.compressor.init_residual(params) if self.compressor else None
+        )
+        self.step = 0
+        self.straggler_steps = 0
+        self.ckpt = (
+            Checkpointer(tcfg.ckpt_dir, keep=tcfg.ckpt_keep, every=tcfg.ckpt_every)
+            if tcfg.ckpt_dir else None
+        )
+        step_fn = make_train_step(cfg, tcfg, self.compressor)
+        self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # -------------------------------------------------------------- state
+    def state_tree(self):
+        tree = {"params": self.params, "opt": self.opt_state}
+        if self.residual is not None:
+            tree["residual"] = self.residual
+        return tree
+
+    def save(self, force=False):
+        if self.ckpt is None:
+            return None
+        extra = {"step": self.step, "data": self.data.state(),
+                 "straggler_steps": self.straggler_steps}
+        return self.ckpt.maybe_save(self.step, self.state_tree(), extra, force=force)
+
+    def restore(self, shardings=None):
+        """Resume from the latest checkpoint (elastic: any source mesh)."""
+        tree, extra, step = self.ckpt.restore(self.state_tree(), shardings)
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.residual = tree.get("residual", self.residual)
+        self.step = int(extra["step"])
+        self.straggler_steps = int(extra.get("straggler_steps", 0))
+        self.data.restore(extra["data"])
+        return step
+
+    # --------------------------------------------------------------- loop
+    def run(self, n_steps: int, *, log_every: int = 10, on_metrics=None):
+        history = []
+        ctx = use_rules(self.rules) if self.rules else _nullcontext()
+        with ctx:
+            for _ in range(n_steps):
+                batch = {k: jnp.asarray(v) for k, v in next(self.data).items()}
+                t0 = time.monotonic()
+                self.params, self.opt_state, self.residual, metrics = self._jit_step(
+                    self.params, self.opt_state, batch, self.residual
+                )
+                metrics = {k: float(v) for k, v in metrics.items()}
+                dt = time.monotonic() - t0
+                metrics["step_time_s"] = dt
+                if (
+                    self.tcfg.step_deadline_s is not None
+                    and dt > self.tcfg.step_deadline_s
+                ):
+                    self.straggler_steps += 1
+                    log.warning("straggler step %d: %.2fs > deadline %.2fs",
+                                self.step, dt, self.tcfg.step_deadline_s)
+                self.step += 1
+                history.append(metrics)
+                if on_metrics and self.step % log_every == 0:
+                    on_metrics(self.step, metrics)
+                self.save()
+        return history
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

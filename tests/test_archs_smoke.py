@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward/train step on CPU, shape + NaN assertions (assignment deliverable f).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models.ssm import init_mamba, init_ssm_cache, mamba_decode_step, mamba_mixer
+from repro.models.transformer import Model
+
+
+def _smoke_batch(cfg, key, B=2, S=32):
+    kt, kf, kl = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend is not None:
+        n = S if cfg.frontend.kind == "audio" else cfg.frontend.n_positions
+        batch["features"] = jax.random.normal(kf, (B, n, cfg.frontend.feature_dim))
+        batch["labels"] = jax.random.randint(kl, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_shapes_and_no_nans(arch):
+    cfg = get_config(arch, smoke=True)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = m(params, batch)
+    S = 32 + (cfg.frontend.n_positions if cfg.frontend and cfg.frontend.kind == "vision" else 0)
+    assert logits.shape == (2, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert np.isfinite(float(aux["load_balance_loss"]))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_one_train_step(arch):
+    """loss + grads finite; a gradient step changes the loss."""
+    cfg = get_config(arch, smoke=True)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+
+    @jax.jit
+    def step(p):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: m.loss(p, batch), has_aux=True
+        )(p)
+        new_p = jax.tree.map(lambda w, g: w - 0.1 * g.astype(w.dtype), p, grads)
+        return loss, new_p, grads
+
+    loss0, new_params, grads = step(params)
+    assert np.isfinite(float(loss0))
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+    loss1, _, _ = step(new_params)
+    assert float(loss1) != float(loss0)
+
+
+@pytest.mark.parametrize("arch", [a for a in list_archs()
+                                  if not get_config(a).encoder_only])
+def test_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    cache = m.init_cache(2, 64)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = m.decode_step(params, cache, tok)
+        tok = jnp.argmax(logits, -1)[:, None]
+    assert logits.shape == (2, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert int(cache["length"]) == 3
+
+
+def test_encoder_only_rejects_decode():
+    cfg = get_config("hubert-xlarge", smoke=True)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        m.decode_step(params, m.init_cache(1, 8), jnp.zeros((1, 1), jnp.int32))
+
+
+def test_prefill_then_decode_matches_full_forward():
+    """Teacher-forced decode after prefill must equal the parallel forward."""
+    cfg = get_config("internlm2-20b", smoke=True)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab_size)
+    full_logits, _ = m(params, {"tokens": toks})
+
+    cache = m.init_cache(1, 32)
+    pre_logits, cache = m.prefill(params, {"tokens": toks[:, :8]}, cache)
+    np.testing.assert_allclose(
+        np.asarray(pre_logits), np.asarray(full_logits[:, 7]), rtol=2e-3, atol=2e-3
+    )
+    logits = pre_logits
+    for t in range(8, 12):
+        logits, cache = m.decode_step(params, cache, toks[:, t : t + 1])
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, t]), rtol=2e-3, atol=2e-3
+        )
+
+
+def test_ssd_chunked_matches_recurrent():
+    """Mamba2 SSD chunked scan ≡ step-by-step recurrence (state-space
+    duality — the identity making the paper's batched-GEMM form valid)."""
+    cfg = get_config("mamba2-1.3b", smoke=True).with_(n_periods=1)
+    p = init_mamba(jax.random.PRNGKey(0), cfg)
+    B, L = 2, 48  # not a multiple of chunk=16 → exercises chunk fallback
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, L, cfg.d_model)) * 0.5
+    y_chunk, _ = mamba_mixer(cfg, p, x)
+    cache = init_ssm_cache(cfg, B, jnp.float32)
+    ys = []
+    for t in range(L):
+        yt, cache = mamba_decode_step(cfg, p, x[:, t : t + 1], cache)
+        ys.append(yt)
+    y_rec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gemma2_softcap_bounds_logits():
+    cfg = get_config("gemma2-27b", smoke=True)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    logits, _ = m(params, _smoke_batch(cfg, jax.random.PRNGKey(1)))
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_softcap + 1e-3
+
+
+def test_param_count_sanity():
+    """Full configs should land near their nameplate sizes."""
+    approx = {
+        "mamba2-1.3b": (1.3e9, 0.35),
+        "internlm2-20b": (20e9, 0.25),
+        "gemma2-27b": (27e9, 0.35),
+        "granite-20b": (20e9, 0.35),
+        "kimi-k2-1t-a32b": (1.0e12, 0.35),
+    }
+    for arch, (target, tol) in approx.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < tol, (arch, n, target)

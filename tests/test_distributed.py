@@ -1,0 +1,199 @@
+"""Distribution layer tests.
+
+Multi-device tests run in subprocesses so the host-platform device count
+(which locks at first jax init) never leaks into the other tests.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.compress import Int8Compressor, compress_bf16
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+# ------------------------------------------------------------- compression
+def test_bf16_compression_close():
+    g = {"w": jnp.linspace(-3, 3, 1000)}
+    c = compress_bf16(g)
+    assert float(jnp.max(jnp.abs(c["w"] - g["w"]))) < 0.02
+
+
+def test_int8_error_feedback_is_unbiased():
+    """Accumulated quantized gradients track accumulated true gradients."""
+    comp = Int8Compressor(block=64)
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    params = {"w": jnp.zeros(256)}
+    res = comp.init_residual(params)
+    acc = jnp.zeros(256)
+    for _ in range(50):
+        deq, res = comp.compress({"w": g_true}, res)
+        acc = acc + deq["w"]
+    err = float(jnp.max(jnp.abs(acc / 50 - g_true)))
+    assert err < 0.02, err  # residual feedback keeps the average unbiased
+
+
+def test_int8_quantization_bounded_error():
+    comp = Int8Compressor(block=32)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((33, 7)), jnp.float32)
+    q = comp._quant_dequant(x)
+    scale = float(jnp.max(jnp.abs(x))) / 127
+    assert float(jnp.max(jnp.abs(q - x))) <= scale + 1e-6
+
+
+# ------------------------------------------------------------------ rules
+def test_sharding_rules_dedup_and_missing_axes():
+    code = """
+    import jax
+    from repro.distributed.sharding import ShardingRules
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rules = ShardingRules(mesh)
+    # pod axis absent on this mesh -> dropped; duplicate mesh axis -> dropped
+    spec = rules.physical(("batch", "kv_seq", "kv_heads", None))
+    print(spec)
+    """
+    out = run_py(code, devices=8)
+    assert "PartitionSpec('data', 'model', None, None)" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    """Same batch, same init: loss on a 2x4 mesh equals single-device loss."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.distributed.sharding import ShardingRules, use_rules
+    from repro.launch.shardings import (param_logical_axes, batch_logical_axes,
+                                        tree_shardings)
+    from repro.models.transformer import init_params, lm_loss
+
+    cfg = get_config("qwen2-moe-a2.7b", smoke=True).with_(n_periods=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    loss_1dev = jax.jit(lambda p, b: lm_loss(cfg, p, b)[0])(params, batch)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rules = ShardingRules(mesh)
+    p_spec = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = tree_shardings(rules, param_logical_axes(p_spec), p_spec)
+    b_sh = tree_shardings(rules, batch_logical_axes(batch),
+                          jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch))
+    params_s = jax.device_put(params, p_sh)
+    batch_s = jax.device_put(batch, b_sh)
+    with mesh, use_rules(rules):
+        loss_mesh = jax.jit(lambda p, b: lm_loss(cfg, p, b)[0])(params_s, batch_s)
+    print("SINGLE", float(loss_1dev), "MESH", float(loss_mesh))
+    assert abs(float(loss_1dev) - float(loss_mesh)) < 2e-3, (loss_1dev, loss_mesh)
+    """
+    run_py(code, devices=8)
+
+
+def test_pipeline_matches_sequential():
+    """GPipe over a 4-stage axis == running the stages sequentially."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.distributed.pipeline import pipeline_forward
+    mesh = jax.make_mesh((4,), ("pod",))
+    n_stages, n_micro, micro, d = 4, 8, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), n_stages)
+    Ws = jnp.stack([jax.random.normal(k, (d, d)) * 0.3 for k in ks])
+    x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, micro, d))
+
+    def stage_fn(params, x, stage_idx):
+        return jnp.tanh(x @ params["W"])
+
+    y_pipe = pipeline_forward(mesh, stage_fn, {"W": Ws}, x, axis="pod")
+
+    y_ref = x
+    for s in range(n_stages):
+        y_ref = jnp.tanh(y_ref @ Ws[s])
+    np.testing.assert_allclose(np.asarray(y_pipe), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    print("PIPELINE OK")
+    """
+    out = run_py(code, devices=4)
+    assert "PIPELINE OK" in out
+
+
+def test_elastic_restore_across_mesh_sizes(tmp_path):
+    """Checkpoint written unsharded restores onto a different mesh shape."""
+    code = f"""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.distributed.sharding import ShardingRules
+    from repro.launch.shardings import param_logical_axes, tree_shardings
+    from repro.models.transformer import init_params
+    from repro.training.checkpoint import save_checkpoint, restore_checkpoint
+
+    cfg = get_config("internlm2-20b", smoke=True).with_(n_periods=1)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    save_checkpoint({str(tmp_path)!r}, 7, params)
+
+    # restore onto a 2x2 mesh (as if rescaled from some other fleet size)
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    rules = ShardingRules(mesh)
+    p_spec = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    shardings = tree_shardings(rules, param_logical_axes(p_spec), p_spec)
+    restored, extra, step = restore_checkpoint(
+        {str(tmp_path)!r}, None, params, shardings=shardings)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("ELASTIC OK", jax.tree.leaves(restored)[0].sharding)
+    """
+    out = run_py(code, devices=4)
+    assert "ELASTIC OK" in out
+
+
+# ------------------------------------------------------------- dryrun (CI)
+def test_dryrun_smoke_cell_compiles_on_512_devices():
+    """A reduced config through the real dryrun path on the 16x16 mesh."""
+    code = """
+    from repro.launch import dryrun  # sets 512 host devices FIRST
+    import repro.configs.registry as reg
+    # monkeypatch get_config to the smoke config so the cell stays tiny
+    full = reg.get_config
+    dryrun.get_config = lambda a, **kw: full(a, smoke=True)
+    rec = dryrun_rec = dryrun.dryrun_cell("minicpm-2b", "train_4k", verbose=False)
+    assert rec["status"] == "ok", rec
+    rec2 = dryrun.dryrun_cell("minicpm-2b", "train_4k", multi_pod=True, verbose=False)
+    assert rec2["status"] == "ok", rec2
+    assert rec2["mesh"] == "2x16x16"
+    print("DRYRUN OK", rec["flops"], rec2["flops"])
+    """
+    out = run_py(code, devices=512)
+    assert "DRYRUN OK" in out
+
+
+def test_skip_cells_report_reasons():
+    code = """
+    from repro.launch import dryrun
+    rec = dryrun.dryrun_cell("hubert-xlarge", "decode_32k")
+    assert rec["status"] == "skipped" and "encoder-only" in rec["reason"], rec
+    rec = dryrun.dryrun_cell("gemma2-27b", "long_500k")
+    assert rec["status"] == "skipped" and "sub-quadratic" in rec["reason"], rec
+    print("SKIPS OK")
+    """
+    out = run_py(code, devices=8)
+    assert "SKIPS OK" in out

@@ -1,0 +1,88 @@
+"""Unit tests for mode algebra and layout rules."""
+
+import pytest
+
+from repro.core.notation import (
+    ContractionSpec,
+    eligible_batch_modes,
+    flattenable_groups,
+    parse_spec,
+    to_row_major,
+)
+
+
+def test_parse_roundtrip():
+    cs = parse_spec("mk,knp->mnp")
+    assert cs.a_modes == "mk" and cs.b_modes == "knp" and cs.c_modes == "mnp"
+    assert cs.contracted == "k"
+    assert cs.a_free == "m" and cs.b_free == "np"
+    assert cs.is_single_mode
+
+
+def test_parse_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        parse_spec("mk,knp")
+    with pytest.raises(ValueError):
+        parse_spec("mmk,knp->mnp")  # repeated mode
+    with pytest.raises(ValueError):
+        parse_spec("mk,knp->mnq")  # q never produced
+    with pytest.raises(ValueError):
+        parse_spec("mk,knp->mn")  # free mode p dropped
+
+
+def test_shared_batch_modes():
+    cs = parse_spec("bmk,bkn->bmn")
+    assert cs.batch == "b"
+    assert cs.contracted == "k"
+
+
+def test_row_major_mirror_is_involution():
+    spec = "mk,knp->mnp"
+    assert to_row_major(to_row_major(spec)) == spec
+    assert to_row_major(spec) == "km,pnk->pnm"
+
+
+def test_flattenable_groups_paper_case_11():
+    # paper 1.1 (row-major): km,pnk->pnm — (pn) flattens
+    cs = parse_spec("km,pnk->pnm")
+    assert flattenable_groups(cs) == ["pn"]
+
+
+def test_flattenable_groups_rejects_split_groups():
+    # m from A, n from B: adjacent in C but split across inputs
+    cs = parse_spec("km,nk->mn")
+    assert flattenable_groups(cs) == []
+
+
+def test_flattenable_contracted_group():
+    # two contracted modes adjacent+ordered in both inputs fuse
+    cs = parse_spec("mij,ijn->mn")
+    assert "ij" in flattenable_groups(cs)
+
+
+def test_flattenable_contracted_group_rejected_when_disordered():
+    cs = parse_spec("mij,jin->mn")
+    assert flattenable_groups(cs) == []
+
+
+def test_no_last_mode_rule():
+    # row-major: batching an order-3 operand's LAST axis is illegal
+    cs = parse_spec("km,pkn->pnm")  # paper 1.3 mirrored
+    infos = {i.mode: i for i in eligible_batch_modes(cs, {m: 4 for m in "mnpk"})}
+    assert infos["p"].sb_legal  # major-most axis of B: fine
+    assert not infos["n"].sb_legal  # minor-most axis of order-3 B
+    assert not infos["m"].sb_legal  # minor-most mode of C
+
+
+def test_gemv_degrade_flag():
+    cs = parse_spec("kn,mkp->pnm")  # paper 3.4 mirrored: n lives in order-2 A
+    infos = {i.mode: i for i in eligible_batch_modes(cs, {m: 4 for m in "mnpk"})}
+    assert infos["n"].gemv_degrade
+
+
+def test_batch_mode_ordering_prefers_largest_dim():
+    cs = parse_spec("km,pnk->pnm")
+    dims = {"m": 4, "n": 64, "p": 8, "k": 4}
+    infos = eligible_batch_modes(cs, dims)
+    legal = [i.mode for i in infos if i.sb_legal and not i.gemv_degrade]
+    assert legal[0] == "n"

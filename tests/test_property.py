@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.contract import contract
+from repro.core.notation import CaseKind, parse_spec
+from repro.core.planner import make_plan
+from repro.distributed.compress import Int8Compressor
+
+MODES = "mnpqk"
+
+
+@st.composite
+def contraction_specs(draw):
+    """Random single-k pairwise contractions of order ≤ 3 each side."""
+    k = "k"
+    n_a_free = draw(st.integers(0, 2))
+    n_b_free = draw(st.integers(max(0, 1 - n_a_free), 2))
+    free = list("mnpq")[: n_a_free + n_b_free]
+    a_free, b_free = free[:n_a_free], free[n_a_free:]
+    a_modes = draw(st.permutations(a_free + [k]))
+    b_modes = draw(st.permutations(b_free + [k]))
+    c_modes = draw(st.permutations(free))
+    dims = {m: draw(st.integers(1, 7)) for m in free + [k]}
+    return "".join(a_modes), "".join(b_modes), "".join(c_modes), dims
+
+
+@given(contraction_specs())
+@settings(max_examples=60, deadline=None)
+def test_contract_matches_einsum_for_any_layout(spec):
+    a_m, b_m, c_m, dims = spec
+    s = f"{a_m},{b_m}->{c_m}"
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal([dims[m] for m in a_m]), jnp.float32)
+    B = jnp.asarray(rng.standard_normal([dims[m] for m in b_m]), jnp.float32)
+    ref = jnp.einsum(s, A, B)
+    for strategy in ("auto", "batched", "direct", "conventional"):
+        got = contract(s, A, B, strategy=strategy)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4, err_msg=f"{s} {strategy}")
+
+
+@given(contraction_specs())
+@settings(max_examples=60, deadline=None)
+def test_planner_invariants(spec):
+    a_m, b_m, c_m, dims = spec
+    s = f"{a_m},{b_m}->{c_m}"
+    plan = make_plan(s, dims)
+    fs = plan.fspec
+    # every output mode is accounted for exactly once
+    covered = set(plan.batch_modes)
+    if plan.gemm_modes:
+        u, v, _ = plan.gemm_modes
+        covered |= {u, v} - {""}
+    else:
+        covered |= set(fs.c_modes)
+    assert covered >= set(fs.c_modes), plan.describe()
+    # no-last-mode rule: an sb batch mode never sits minor-most on an
+    # order-≥3 tensor (exceptional plans are exempt — that's their point)
+    if plan.kind in (CaseKind.SB_GEMM, CaseKind.NESTED) and plan.sb_batch:
+        for modes in (fs.a_modes, fs.b_modes, fs.c_modes):
+            if len(modes) >= 3:
+                assert modes[-1] != plan.sb_batch, plan.describe()
+
+
+@given(contraction_specs())
+@settings(max_examples=30, deadline=None)
+def test_pallas_backend_matches_einsum(spec):
+    a_m, b_m, c_m, dims = spec
+    s = f"{a_m},{b_m}->{c_m}"
+    rng = np.random.default_rng(1)
+    A = jnp.asarray(rng.standard_normal([dims[m] for m in a_m]), jnp.float32)
+    B = jnp.asarray(rng.standard_normal([dims[m] for m in b_m]), jnp.float32)
+    ref = jnp.einsum(s, A, B)
+    got = contract(s, A, B, strategy="batched", backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4, err_msg=s)
+
+
+@given(
+    st.integers(1, 500),  # length
+    st.integers(8, 128),  # block
+    st.floats(0.01, 100.0),  # scale of the gradient values
+)
+@settings(max_examples=40, deadline=None)
+def test_int8_quantization_error_bounded_by_block_scale(n, block, scale):
+    comp = Int8Compressor(block=block)
+    rng = np.random.default_rng(n)
+    g = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    q = comp._quant_dequant(g)
+    # per-block max-abs / 127 bounds the elementwise error (±0.5 ulp)
+    err = np.asarray(jnp.abs(q - g))
+    bound = float(jnp.max(jnp.abs(g))) / 127.0 * 0.5 + 1e-6
+    assert err.max() <= bound * 1.0001, (err.max(), bound)
+
+
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=3), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_checkpoint_roundtrip_any_tree(shape, seed):
+    import tempfile
+
+    from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+
+    rng = np.random.default_rng(seed)
+    tree = {
+        "a": jnp.asarray(rng.standard_normal(shape), jnp.float32),
+        "nested": {"b": jnp.asarray(rng.integers(0, 10, shape), jnp.int32)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        restored, _, _ = restore_checkpoint(d, None, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,65 @@
+"""The planner must reproduce the paper's Table II taxonomy exactly."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.contract import contract, conventional_transpose_count
+from repro.core.notation import CaseKind
+from repro.core.planner import make_plan
+from repro.core.table2 import CASES, EXCEPTIONAL_CASES, FLAT_CASES
+
+DIMS = {"m": 5, "n": 7, "p": 3, "k": 4}
+
+
+def test_case_counts():
+    assert len(CASES) == 36
+    assert len(FLAT_CASES) == 8
+    assert len(EXCEPTIONAL_CASES) == 8
+
+
+@pytest.mark.parametrize("label", sorted(CASES))
+def test_planner_matches_paper_classification(label):
+    case = CASES[label]
+    plan = make_plan(case.row_major(), DIMS)
+    assert (plan.kind == CaseKind.FLAT_GEMM) == case.flattenable, plan.describe()
+    assert (plan.kind == CaseKind.EXCEPTIONAL) == case.exceptional, plan.describe()
+
+
+@pytest.mark.parametrize("label", sorted(CASES))
+def test_batched_plans_match_paper(label):
+    """Without flattening, exactly the paper's 28 cases admit sb_gemm."""
+    case = CASES[label]
+    plan = make_plan(case.row_major(), DIMS, allow_flatten=False)
+    assert (plan.kind == CaseKind.EXCEPTIONAL) == case.exceptional, plan.describe()
+
+
+@pytest.mark.parametrize("label", sorted(CASES))
+@pytest.mark.parametrize("strategy", ["auto", "batched", "direct", "conventional"])
+def test_all_cases_numerically_correct(label, strategy):
+    rng = np.random.default_rng(hash(label) % 2**31)
+    rm = CASES[label].row_major()
+    a_modes, rest = rm.split(",")
+    b_modes, _ = rest.split("->")
+    A = jnp.asarray(rng.standard_normal([DIMS[m] for m in a_modes]), jnp.float32)
+    B = jnp.asarray(rng.standard_normal([DIMS[m] for m in b_modes]), jnp.float32)
+    ref = jnp.einsum(rm, A, B)
+    got = contract(rm, A, B, strategy=strategy)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_flatten_strategy_rejects_unflattenable():
+    rm = CASES["1.2"].row_major()
+    A = jnp.zeros((DIMS["k"], DIMS["m"]))
+    B = jnp.zeros((DIMS["n"], DIMS["k"], DIMS["p"]))
+    with pytest.raises(ValueError):
+        contract(rm, A, B, strategy="flatten")
+
+
+def test_conventional_pays_transposes():
+    """The matricization baseline performs ≥1 materialized permute for the
+    cases the paper's case studies call out."""
+    assert conventional_transpose_count(CASES["1.3"].row_major()) >= 1
+    assert conventional_transpose_count(CASES["2.4"].row_major()) >= 1
+    # and at least one exceptional case needs several
+    assert conventional_transpose_count(CASES["3.4"].row_major()) >= 2

@@ -18,6 +18,7 @@ MODULES = [
     "fig56_batch_mode",
     "fig78_exceptional",
     "fig9_tucker",
+    "fig10_nary_path",
     "table2_cases",
 ]
 

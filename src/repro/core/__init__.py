@@ -1,3 +1,24 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's primary contribution, as a layered contraction engine:
+
+:mod:`repro.core.notation` — mode algebra and layout rules;
+:mod:`repro.core.planner`  — Algorithm 2 (pairwise plans) + cost model;
+:mod:`repro.core.contract` — pairwise execution on XLA / Pallas;
+:mod:`repro.core.einsum`   — the n-ary front-end with path planning.
+"""
+
+from repro.core.contract import contract
+from repro.core.einsum import ContractionPath, contraction_path, xeinsum
+from repro.core.notation import ContractionSpec, parse_spec
+from repro.core.planner import Plan, contraction_flops, make_plan
+
+__all__ = [
+    "contract",
+    "xeinsum",
+    "contraction_path",
+    "ContractionPath",
+    "ContractionSpec",
+    "parse_spec",
+    "Plan",
+    "make_plan",
+    "contraction_flops",
+]

@@ -45,6 +45,11 @@ Backend = Literal["xla", "pallas"]
 
 
 def infer_dims(spec: ContractionSpec, A, B) -> dict:
+    """Map every mode of ``spec`` to its size from the operand shapes.
+
+    Raises ``ValueError`` on rank mismatch between an operand and its mode
+    string, or when a mode appears with two different sizes.
+    """
     if A.ndim != len(spec.a_modes) or B.ndim != len(spec.b_modes):
         raise ValueError(
             f"rank mismatch: A{A.shape} vs '{spec.a_modes}', B{B.shape} vs '{spec.b_modes}'"
@@ -68,6 +73,33 @@ def contract(
     preferred_element_type=jnp.float32,
     out_dtype=None,
 ):
+    """Evaluate one pairwise contraction ``C = A · B``.
+
+    This is the engine's pairwise entry point; for multi-operand
+    expressions use :func:`repro.core.einsum.xeinsum`, which plans a
+    contraction path and lowers each step through this function.
+
+    Args:
+      spec: row-major einsum spec, e.g. ``"mk,pkn->pmn"``, or a parsed
+        :class:`~repro.core.notation.ContractionSpec`.  Exactly two
+        operands; no traces, no ellipses; every free mode must appear in
+        the output.
+      A, B: the operand arrays, ranks matching the spec.
+      strategy: one of the five strategies in the module docstring
+        (``"auto"``, ``"flatten"``, ``"batched"``, ``"direct"``,
+        ``"conventional"``).  ``"flatten"`` raises ``ValueError`` if the
+        spec admits no flattened single-GEMM evaluation.
+      backend: ``"xla"`` (dot_general/vmap composition) or ``"pallas"``
+        (StridedBatchedGEMM / extended-transpose kernels; interpret mode
+        off-TPU).  Ignored by ``"direct"`` and ``"conventional"``.
+      force_batch: pin the strided-batch mode (benchmark use — Fig. 5/6
+        compare batching the last vs. the middle output mode).
+      preferred_element_type: accumulator dtype passed to ``dot_general``.
+      out_dtype: result dtype; defaults to the promoted operand dtype.
+
+    Returns:
+      The contracted array with modes ordered as ``spec``'s output.
+    """
     cs = parse_spec(spec) if isinstance(spec, str) else spec
     dims = infer_dims(cs, A, B)
     out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
@@ -225,7 +257,13 @@ def _prod(dims: dict, modes: str) -> int:
 
 
 def conventional_transpose_count(spec: str | ContractionSpec) -> int:
-    """How many materialized permutes the conventional approach performs."""
+    """How many materialized permutes the conventional approach performs.
+
+    Counts the explicit copies of the matricization baseline (permute A
+    into ``I×K`` form, B into ``K×J`` form, and the result back into the
+    requested output order) — the paper's Fig. 1 motivation: each one is
+    pure memory traffic the strided-batched evaluation never pays.
+    """
     cs = parse_spec(spec) if isinstance(spec, str) else spec
     k = cs.contracted
     I = "".join(m for m in cs.c_modes if m in cs.a_modes)
@@ -242,7 +280,13 @@ def conventional_transpose_count(spec: str | ContractionSpec) -> int:
 # --------------------------------------------------------------------------
 
 def count_hlo_ops(fn, *args, ops=("transpose", "copy")) -> dict:
-    """Count occurrences of given HLO op kinds in the *optimized* module."""
+    """Count occurrences of given HLO op kinds in the *optimized* module.
+
+    Jit-lowers ``fn(*args)``, compiles it, and scans the optimized HLO
+    text — the tests and the Fig. 1/Fig. 3 benchmarks use this to verify
+    that engine-planned contractions really compile transpose-free while
+    the conventional baseline's copies survive into the executable.
+    """
     lowered = jax.jit(fn).lower(*args)
     text = lowered.compile().as_text()
     counts = {}

@@ -1,8 +1,11 @@
 """CP decomposition via ALS — the other decomposition named in paper §II-C.
 
 ``T_mnp ≈ Σ_r λ_r · A_mr ∘ B_nr ∘ C_pr``.  The bottleneck kernel is the
-MTTKRP (matricized tensor times Khatri-Rao product); we evaluate it as two
-chained contractions through the engine — no unfolding copies.
+MTTKRP (matricized tensor times Khatri-Rao product); we state it as one
+three-operand :func:`repro.core.einsum.xeinsum` expression and let the
+path optimizer choose the pairwise order — either tensor-times-matrix
+first, or forming the (tiny) Khatri-Rao factor ``B ⊙ C`` first, whichever
+the cost model prefers for the shapes at hand.  No unfolding copies.
 """
 
 from __future__ import annotations
@@ -14,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.contract import contract
+from repro.core.einsum import xeinsum
 
 __all__ = ["CPResult", "cp_als"]
 
@@ -27,8 +31,7 @@ class CPResult:
 
 def _mttkrp_1(T, B, C, ctr):
     """MTTKRP mode-1: M_mr = Σ_np T_mnp B_nr C_pr."""
-    t = ctr("mnp,pr->mnr", T, C)           # strided-batch contraction
-    return contract("mnr,nr->mr", t, B, strategy="direct")
+    return ctr("mnp,nr,pr->mr", T, B, C)
 
 
 def cp_als(T, rank: int, *, n_iter: int = 25, strategy="auto", backend="xla",
@@ -43,7 +46,7 @@ def cp_als(T, rank: int, *, n_iter: int = 25, strategy="auto", backend="xla",
     A = nvecs(contract("mnp,qnp->mq", T, T, strategy="direct"), rank)
     B = nvecs(contract("mnp,mqp->nq", T, T, strategy="direct"), rank)
     C = nvecs(contract("mnp,mnq->pq", T, T, strategy="direct"), rank)
-    ctr = functools.partial(contract, strategy=strategy, backend=backend)
+    ctr = functools.partial(xeinsum, strategy=strategy, backend=backend)
 
     def solve(mttkrp, X, Y):
         gram = (X.T @ X) * (Y.T @ Y)
@@ -54,13 +57,9 @@ def cp_als(T, rank: int, *, n_iter: int = 25, strategy="auto", backend="xla",
         A, B, C = fac
         A = solve(_mttkrp_1(T, B, C, ctr), B, C)
         # mode-2: M_nr = Σ_mp T_mnp A_mr C_pr
-        t2 = ctr("mnp,pr->mnr", T, C)
-        m2 = contract("mnr,mr->nr", t2, A, strategy="direct")
-        B = solve(m2, A, C)
+        B = solve(ctr("mnp,mr,pr->nr", T, A, C), A, C)
         # mode-3: M_pr = Σ_mn T_mnp A_mr B_nr
-        t3 = ctr("mnp,nr->mrp", T, B)
-        m3 = contract("mrp,mr->pr", t3, A, strategy="direct")
-        C = solve(m3, A, B)
+        C = solve(ctr("mnp,mr,nr->pr", T, A, B), A, B)
         return A, B, C
 
     fac = (A, B, C)
@@ -71,6 +70,6 @@ def cp_als(T, rank: int, *, n_iter: int = 25, strategy="auto", backend="xla",
     An = A / jnp.linalg.norm(A, axis=0)
     Bn = B / jnp.linalg.norm(B, axis=0)
     Cn = C / jnp.linalg.norm(C, axis=0)
-    recon = jnp.einsum("r,mr,nr,pr->mnp", lam, An, Bn, Cn)
+    recon = xeinsum("r,mr,nr,pr->mnp", lam, An, Bn, Cn)
     rel = jnp.linalg.norm(T - recon) / jnp.linalg.norm(T)
     return CPResult(weights=lam, factors=(An, Bn, Cn), rel_error=rel)

@@ -68,17 +68,24 @@ class ContractionSpec:
 
     @property
     def a_free(self) -> str:
+        """A's free modes (in A but not B) — the GEMM's M-side candidates."""
         return "".join(m for m in self.a_modes if m not in set(self.b_modes))
 
     @property
     def b_free(self) -> str:
+        """B's free modes (in B but not A) — the GEMM's N-side candidates."""
         return "".join(m for m in self.b_modes if m not in set(self.a_modes))
 
     @property
     def is_single_mode(self) -> bool:
+        """True for the paper's Table II regime: exactly one contracted
+        mode and no shared batch modes."""
         return len(self.contracted) == 1 and not self.batch
 
     def validate(self) -> None:
+        """Raise ``ValueError`` for traces, invalid mode characters,
+        output modes no input produces, or free modes missing from the
+        output (pairwise contractions cannot sum a free mode away)."""
         for name, modes in (("A", self.a_modes), ("B", self.b_modes), ("C", self.c_modes)):
             if len(set(modes)) != len(modes):
                 raise ValueError(f"repeated mode in {name}: {modes!r} (traces unsupported)")
@@ -106,7 +113,14 @@ class ContractionSpec:
 
 
 def parse_spec(spec: str) -> ContractionSpec:
-    """Parse ``"mk,knp->mnp"`` into a validated :class:`ContractionSpec`."""
+    """Parse ``"mk,knp->mnp"`` into a validated :class:`ContractionSpec`.
+
+    Exactly two comma-separated operands and an explicit ``->`` output are
+    required (n-ary and implicit-output specs belong to
+    :func:`repro.core.einsum.parse_nary`).  Raises ``ValueError`` for
+    malformed specs, traces (a mode repeated within one operand), output
+    modes no input produces, or free modes missing from the output.
+    """
     try:
         inputs, out = spec.replace(" ", "").split("->")
         a, b = inputs.split(",")
@@ -118,12 +132,20 @@ def parse_spec(spec: str) -> ContractionSpec:
 
 
 def to_row_major(paper_spec: str) -> str:
-    """Convert a paper-notation (column-major) spec to row-major."""
+    """Convert a paper-notation (column-major) spec to row-major.
+
+    The paper stores tensors column-major (stride-1 mode first); JAX is
+    row-major (stride-1 mode last).  Reversing every mode string maps one
+    convention's memory layout onto the other, so a Table II case keeps
+    its classification (flattenable / sb-batchable / exceptional) across
+    the conversion.
+    """
     return parse_spec(paper_spec).reversed().spec_str()
 
 
 def to_col_major(row_spec: str) -> str:
-    return to_row_major(row_spec)  # the mirror is an involution
+    """Inverse of :func:`to_row_major` (the mirror is an involution)."""
+    return to_row_major(row_spec)
 
 
 # --------------------------------------------------------------------------

@@ -26,7 +26,7 @@ from repro.core.notation import (
     parse_spec,
 )
 
-__all__ = ["Plan", "make_plan"]
+__all__ = ["Plan", "make_plan", "modes_size", "contraction_flops"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +62,30 @@ class Plan:
         if self.notes:
             parts.append(self.notes)
         return " ".join(parts)
+
+
+# --------------------------------------------------------------------------
+# Cost model (used by the n-ary path optimizer and the fig10 benchmark)
+# --------------------------------------------------------------------------
+
+def modes_size(modes: str, dims: dict) -> int:
+    """Element count of a tensor with the given mode string (1 for scalars)."""
+    size = 1
+    for m in modes:
+        size *= dims[m]
+    return size
+
+
+def contraction_flops(spec: str | ContractionSpec, dims: dict) -> int:
+    """Flop estimate for one pairwise contraction: ``2·∏ dims`` over every
+    distinct mode the contraction touches (one multiply + one add per term
+    of the inner sum — the standard einsum cost model).
+
+    This is the quantity the n-ary path optimizer minimises; it is also what
+    the paper's arithmetic-intensity analysis (§II-B) uses as the numerator.
+    """
+    cs = parse_spec(spec) if isinstance(spec, str) else spec
+    return 2 * modes_size("".join(dict.fromkeys(cs.a_modes + cs.b_modes)), dims)
 
 
 def _apply_flattening(spec: ContractionSpec, groups: list[str], dims: dict):

@@ -4,9 +4,10 @@ Algorithm 1 of the paper, for a third-order tensor ``T ∈ R^{m×n×p}``::
 
     T_mnp ≈ G_ijk A_mi B_nj C_pk
 
-Every tensor-times-matrix product is a single-mode contraction evaluated
-through :func:`repro.core.contract.contract` — with ``strategy="auto"``
-(flatten/strided-batch, no copies) for our method, or
+The multi-operand expressions (Y-updates, core computation and
+reconstruction) go through :func:`repro.core.einsum.xeinsum`, which plans
+the pairwise order and lowers each step through the engine — with
+``strategy="auto"`` (flatten/strided-batch, no copies) for our method, or
 ``strategy="conventional"`` for the matricization baseline the paper
 benchmarks against (TensorToolbox / BTAS / Cyclops all transpose+copy).
 """
@@ -21,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.contract import contract
+from repro.core.einsum import xeinsum
 
 __all__ = ["TuckerResult", "hooi", "tucker_reconstruct", "init_hosvd"]
 
@@ -68,7 +70,7 @@ def hooi(
 ) -> TuckerResult:
     """Higher-order orthogonal iteration (paper Algorithm 1)."""
     i, j, k = ranks
-    ctr = functools.partial(contract, strategy=strategy, backend=backend)
+    xctr = functools.partial(xeinsum, strategy=strategy, backend=backend)
 
     def _factor_from_gram(g, r):
         _, vecs = jnp.linalg.eigh(g)
@@ -76,18 +78,19 @@ def hooi(
 
     def body(fac):
         A, B, C = fac
-        # Y_mjk = T_mnp B_nj C_pk  (two single-mode contractions, Alg 1 l.4)
-        t1 = ctr("mnp,pk->mnk", T, C)
-        y1 = ctr("mnk,nj->mjk", t1, B)
+        # Y_mjk = T_mnp B_nj C_pk  (Alg 1 l.4).  The dominant T·C stage is
+        # staged explicitly so the Y_(1) and Y_(2) updates share it even
+        # without jit (XLA CSE would only recover it under jit).
+        t1 = xctr("mnp,pk->mnk", T, C)
+        y1 = xctr("mnk,nj->mjk", t1, B)
         # leading left SVs of Y_(1) = top eigvecs of Y_(1)·Y_(1)ᵀ — computed
         # as a contraction, so no unfolding transpose is ever materialized.
         A = _factor_from_gram(contract("mjk,qjk->mq", y1, y1, strategy="direct"), i)
         # Y_ink = T_mnp A_mi C_pk  (l.6)
-        y2 = ctr("mnk,mi->ink", t1, A)
+        y2 = xctr("mnk,mi->ink", t1, A)
         B = _factor_from_gram(contract("ink,iqk->nq", y2, y2, strategy="direct"), j)
-        # Y_ijp = T_mnp A_mi B_nj  (l.8)
-        t3 = ctr("mnp,nj->mjp", T, B)
-        y3 = ctr("mjp,mi->ijp", t3, A)
+        # Y_ijp = T_mnp A_mi B_nj  (l.8) — no shared stage; path-planned
+        y3 = xctr("mnp,mi,nj->ijp", T, A, B)
         C = _factor_from_gram(contract("ijp,ijq->pq", y3, y3, strategy="direct"), k)
         return A, B, C
 
@@ -98,10 +101,8 @@ def hooi(
         fac = step(fac)
     A, B, C = fac
 
-    # G_ijk = T ×1 Aᵀ ×2 Bᵀ ×3 Cᵀ
-    g1 = ctr("mnp,mi->inp", T, A)
-    g2 = ctr("inp,nj->ijp", g1, B)
-    G = ctr("ijp,pk->ijk", g2, C)
+    # G_ijk = T ×1 Aᵀ ×2 Bᵀ ×3 Cᵀ — one four-operand expression
+    G = xctr("mnp,mi,nj,pk->ijk", T, A, B, C)
 
     recon = tucker_reconstruct(G, (A, B, C), strategy=strategy, backend=backend)
     rel = jnp.linalg.norm(T - recon) / jnp.linalg.norm(T)
@@ -109,8 +110,8 @@ def hooi(
 
 
 def tucker_reconstruct(G, factors, *, strategy="auto", backend="xla"):
+    """``T ≈ G ×1 A ×2 B ×3 C`` as one path-planned n-ary contraction."""
     A, B, C = factors
-    ctr = functools.partial(contract, strategy=strategy, backend=backend)
-    t = ctr("ijk,mi->mjk", G, A)
-    t = ctr("mjk,nj->mnk", t, B)
-    return ctr("mnk,pk->mnp", t, C)
+    return xeinsum(
+        "ijk,mi,nj,pk->mnp", G, A, B, C, strategy=strategy, backend=backend
+    )

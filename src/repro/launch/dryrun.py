@@ -216,6 +216,10 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jaxlibs return [dict]
+        cost = cost[0] if cost else {}
+    if cost is None:
+        cost = {}
     coll = collective_bytes(compiled.as_text())
 
     record = {

@@ -1,8 +1,9 @@
 """Transformer building blocks.
 
-Every matmul routes through :func:`repro.core.contract.contract`, making
-the paper's strided-batched contraction engine the framework's compute
-path.  Attention's QKᵀ/PV products *are* strided-batched GEMMs (batch =
+Every matmul routes through :func:`repro.core.einsum.xeinsum` — the
+n-ary front-end of the paper's strided-batched contraction engine — so
+model compute and decomposition compute share one planned code path.
+Attention's QKᵀ/PV products *are* strided-batched GEMMs (batch =
 (batch, head-group)); projections are flattened GEMMs.
 """
 
@@ -14,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.contract import contract
+from repro.core.einsum import xeinsum
 from repro.distributed.sharding import logical
 
 __all__ = [
@@ -27,7 +28,7 @@ _NEG_INF = -2.0**30  # large-negative mask value safe in bf16
 
 def _ctr(cfg: ModelConfig):
     return functools.partial(
-        contract, strategy=cfg.contract_strategy, backend=cfg.contract_backend
+        xeinsum, strategy=cfg.contract_strategy, backend=cfg.contract_backend
     )
 
 
@@ -198,8 +199,6 @@ def _chunked_attention(cfg, q, k, v, q_pos, k_pos, *, causal, window):
     memory roofline term for 32k prefill (§Perf hillclimb: granite-20b).
     Returns (B, S, G, R, D).
     """
-    from repro.core.contract import contract
-
     B, S, G, R, D = q.shape
     T = k.shape[1]
     Ck = cfg.attn_chunk
@@ -217,7 +216,7 @@ def _chunked_attention(cfg, q, k, v, q_pos, k_pos, *, causal, window):
     def step(carry, inp):
         m, l, acc = carry
         k_i, v_i, p_i = inp
-        s = contract("bsgrd,btgd->bgrst", q, k_i, strategy="direct")
+        s = xeinsum("bsgrd,btgd->bgrst", q, k_i, strategy="direct")
         s = s.astype(jnp.float32) * scale
         s = softcap(s, cfg.attn_softcap)
         ok = _attn_mask(q_pos, p_i, causal=causal, window=window)  # (S, Ck)
@@ -226,8 +225,8 @@ def _chunked_attention(cfg, q, k, v, q_pos, k_pos, *, causal, window):
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
         l = l * corr + jnp.sum(p, axis=-1)
-        upd = contract("bgrst,btgd->bgrsd", p.astype(q.dtype), v_i,
-                       strategy="direct").astype(jnp.float32)
+        upd = xeinsum("bgrst,btgd->bgrsd", p.astype(q.dtype), v_i,
+                      strategy="direct").astype(jnp.float32)
         acc = acc * corr[..., None] + upd
         return (m_new, l, acc), None
 

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MoEConfig
-from repro.core.contract import contract
+from repro.core.einsum import xeinsum
 from repro.distributed.sharding import logical
 from repro.models.layers import init_dense, init_mlp, mlp
 
@@ -32,7 +32,7 @@ __all__ = ["init_moe", "moe_ffn", "router_aux_loss"]
 
 def _ctr(cfg: ModelConfig):
     return functools.partial(
-        contract, strategy=cfg.contract_strategy, backend=cfg.contract_backend
+        xeinsum, strategy=cfg.contract_strategy, backend=cfg.contract_backend
     )
 
 
@@ -111,8 +111,8 @@ def moe_ffn(cfg: ModelConfig, params, x, *, capacity: int | None = None):
                 y = y + y_sh
             # router stats recomputed under auto sharding (cheap: E×X); the
             # load-balance loss gradient flows through this pass.
-            gl = contract("bse,ef->bsf", x.astype(jnp.float32),
-                          params["router"], strategy="direct")
+            gl = xeinsum("bse,ef->bsf", x.astype(jnp.float32),
+                         params["router"], strategy="direct")
             gates = jax.nn.softmax(gl, axis=-1).reshape(T, -1)
             _, top_e = jax.lax.top_k(gates, m.top_k)
             aux = router_aux_loss(gates, top_e, m.n_experts)
@@ -125,7 +125,7 @@ def moe_ffn(cfg: ModelConfig, params, x, *, capacity: int | None = None):
     xt = x.reshape(n_g, group, E)
     xt = logical(xt, "batch", None, None)
 
-    gate_logits = contract(
+    gate_logits = xeinsum(
         "gte,ef->gtf", xt.astype(jnp.float32), params["router"], strategy="direct"
     )
     gates = jax.nn.softmax(gate_logits, axis=-1)                  # (g,t,X)
@@ -139,7 +139,7 @@ def moe_ffn(cfg: ModelConfig, params, x, *, capacity: int | None = None):
 
     # dispatch: (g,t,X,C),(g,t,E) → (X,g,C,E) — data movement (all-to-all
     # under EP), evaluated direct; the GEMMs below are the paper's kernels.
-    expert_in = contract("gtxc,gte->xgce", dispatch, xt, strategy="direct")
+    expert_in = xeinsum("gtxc,gte->xgce", dispatch, xt, strategy="direct")
     expert_in = logical(expert_in, "expert", "batch", None, None)
 
     # ---- expert FFN: strided-batched GEMM, batch mode = expert ----------
@@ -154,7 +154,7 @@ def moe_ffn(cfg: ModelConfig, params, x, *, capacity: int | None = None):
     out = ctr("xgcf,xfe->xgce", h, params["wo"].astype(dt))
 
     # combine back to tokens (the inverse all-to-all)
-    y = contract("gtxc,xgce->gte", combine, out, strategy="direct")
+    y = xeinsum("gtxc,xgce->gte", combine, out, strategy="direct")
 
     if m.n_shared:
         xs = xt.reshape(B, S, E)

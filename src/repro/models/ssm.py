@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SSMConfig
-from repro.core.contract import contract
+from repro.core.einsum import xeinsum
 from repro.distributed.sharding import logical
 from repro.models.layers import init_dense, rms_norm
 
@@ -27,7 +27,7 @@ __all__ = ["init_mamba", "mamba_mixer", "mamba_decode_step", "init_ssm_cache"]
 
 def _ctr(cfg: ModelConfig):
     return functools.partial(
-        contract, strategy=cfg.contract_strategy, backend=cfg.contract_backend
+        xeinsum, strategy=cfg.contract_strategy, backend=cfg.contract_backend
     )
 
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LayerSpec, ModelConfig
-from repro.core.contract import contract
+from repro.core.einsum import xeinsum
 from repro.distributed.sharding import logical
 from repro.models import layers as L
 from repro.models.frontend import apply_frontend, init_frontend
@@ -30,7 +30,7 @@ __all__ = [
 
 def _ctr(cfg: ModelConfig):
     return functools.partial(
-        contract, strategy=cfg.contract_strategy, backend=cfg.contract_backend
+        xeinsum, strategy=cfg.contract_strategy, backend=cfg.contract_backend
     )
 
 

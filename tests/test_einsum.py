@@ -1,0 +1,225 @@
+"""The n-ary einsum front-end: parity with jnp.einsum, path-optimizer
+correctness and cost ordering, per-step strategy/backend selection."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.einsum import (
+    AUTO_OPTIMAL_LIMIT,
+    contraction_path,
+    parse_nary,
+    xeinsum,
+)
+from repro.core.table2 import CASES
+
+DIMS = {"m": 5, "n": 7, "p": 3, "q": 4, "k": 4, "r": 6,
+        "a": 5, "b": 3, "c": 6, "d": 2, "e": 4, "f": 3,
+        "i": 3, "j": 4, "l": 5, "s": 5, "t": 6}
+
+
+def _ops(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    lhs = spec.replace(" ", "").split("->")[0].split(",")
+    return [
+        jnp.asarray(rng.standard_normal([DIMS[m] for m in modes]), jnp.float32)
+        for modes in lhs
+    ]
+
+
+def _check(spec, *, optimize="auto", strategy="auto", seed=0, atol=1e-4):
+    ops = _ops(spec, seed)
+    ref = jnp.einsum(spec, *ops)
+    got = xeinsum(spec, *ops, optimize=optimize, strategy=strategy)
+    assert got.shape == ref.shape, (spec, got.shape, ref.shape)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref), rtol=1e-4, atol=atol,
+        err_msg=f"{spec} optimize={optimize} strategy={strategy}",
+    )
+
+
+# ---------------------------------------------------------------- parsing
+def test_parse_nary_explicit_and_implicit():
+    assert parse_nary("ab,bc->ac") == (("ab", "bc"), "ac")
+    assert parse_nary("ab,bc") == (("ab", "bc"), "ac")     # einsum convention
+    assert parse_nary("ab,ab") == (("ab", "ab"), "")       # full contraction
+    assert parse_nary("mnk,kr,ms->nrs") == (("mnk", "kr", "ms"), "nrs")
+
+
+@pytest.mark.parametrize("bad", [
+    "aab,bc->ac",          # trace
+    "ab,bc->ad",           # output mode not produced
+    "ab,bc->aa",           # repeated output mode
+    "ab...,bc->ac",        # ellipsis
+])
+def test_parse_nary_rejects(bad):
+    with pytest.raises((ValueError, NotImplementedError)):
+        parse_nary(bad)
+
+
+def test_unknown_optimize_mode_rejected_even_for_two_operands():
+    A, B = jnp.zeros((2, 3)), jnp.zeros((3, 4))
+    with pytest.raises(ValueError, match="optimize"):
+        xeinsum("ab,bc->ac", A, B, optimize="optimla")
+    with pytest.raises(ValueError, match="optimize"):
+        contraction_path("ab,bc,cd->ad", (2, 3), (3, 4), (4, 5),
+                         optimize="best")
+
+
+def test_xeinsum_operand_count_and_dims_checked():
+    A = jnp.zeros((2, 3))
+    with pytest.raises(ValueError):
+        xeinsum("ab,bc->ac", A)                     # too few operands
+    with pytest.raises(ValueError):
+        xeinsum("ab,bc->ac", A, jnp.zeros((4, 5)))  # b: 3 vs 4
+
+
+# ------------------------------------------------- Table II through xeinsum
+@pytest.mark.parametrize("label", sorted(CASES))
+@pytest.mark.parametrize("strategy", ["auto", "batched"])
+def test_table2_cases_match_einsum(label, strategy):
+    """Every pairwise Table II case through the n-ary front-end."""
+    _check(CASES[label].row_major(), strategy=strategy,
+           seed=hash(label) % 2**31)
+
+
+# ------------------------------------------------------- multi-operand chains
+CHAINS = [
+    "ijk,mi,nj,pk->mnp",       # Tucker reconstruction (4 operands)
+    "mnp,mi,nj,pk->ijk",       # Tucker core (the HOOI projection)
+    "r,mr,nr,pr->mnp",         # CP reconstruction with weights
+    "mnp,nr,pr->mr",           # MTTKRP mode-1
+    "mnp,mr,pr->nr",           # MTTKRP mode-2
+    "ab,bc,cd->ad",            # matrix chain
+    "ab,bc,cd,de,ef->af",      # 5-operand chain
+    "bij,bjk,bkl->bil",        # shared batch mode through the whole chain
+    "bsd,btd,bte->bse",        # (QKᵀ)V-style chain
+    "ab,bc->c",                # sum-only free mode (a) on an input
+    "ab,cd->abcd",             # pure outer product
+    "ab,ab->",                 # full contraction to a scalar
+    "a,ab,b->",                # bilinear form x·M·y
+    "mnk,kr,ms->nrs",          # the docstring's headline example
+]
+
+
+@pytest.mark.parametrize("spec", CHAINS)
+@pytest.mark.parametrize("optimize", ["naive", "greedy", "optimal"])
+def test_chains_match_einsum(spec, optimize):
+    _check(spec, optimize=optimize)
+
+
+@pytest.mark.parametrize("spec", ["abc->cab", "ab->b", "abc->b"])
+def test_single_operand(spec):
+    _check(spec)
+
+
+@pytest.mark.parametrize("spec", ["ijk,mi,nj,pk->mnp", "mnp,nr,pr->mr"])
+def test_pallas_strategy_matches(spec):
+    """strategy="pallas" runs every step on the TPU kernels (interpret)."""
+    _check(spec, strategy="pallas")
+
+
+@pytest.mark.parametrize("strategy", ["flatten", "batched", "direct",
+                                      "conventional"])
+def test_per_step_strategies_on_chain(strategy):
+    """n-ary semantics soften "flatten" to flatten-where-possible; every
+    other strategy is applied per step verbatim."""
+    _check("ijk,mi,nj,pk->mnp", strategy=strategy)
+
+
+def test_precomputed_path_reuse():
+    ops = _ops("ab,bc,cd->ad")
+    path = contraction_path("ab,bc,cd->ad", *ops, optimize="optimal")
+    ref = jnp.einsum("ab,bc,cd->ad", *ops)
+    got = xeinsum("ab,bc,cd->ad", *ops, optimize=path)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError):
+        xeinsum("ab,bc,ce->ae", *_ops("ab,bc,ce->ae"), optimize=path)
+
+
+# ---------------------------------------------------------- path optimizer
+def test_optimizer_beats_naive_on_asymmetric_chain():
+    """Thin–fat–thin chain: contracting (bc,cd) first is ~30x cheaper.
+    a=64, b=2, c=64, d=2: naive pays 2·a·b·c + 2·a·c·d = 32k flops,
+    the planned order pays 2·b·c·d + 2·a·b·d = 1k."""
+    shapes = [(64, 2), (2, 64), (64, 2)]
+    naive = contraction_path("ab,bc,cd->ad", *shapes, optimize="naive")
+    for optimize in ("greedy", "optimal"):
+        p = contraction_path("ab,bc,cd->ad", *shapes, optimize=optimize)
+        assert p.total_flops < naive.total_flops, p.describe()
+        # the cheap pair (operands 1 and 2) is contracted first
+        assert {p.steps[0].lhs, p.steps[0].rhs} == {1, 2}, p.describe()
+
+
+def test_optimal_never_costlier_than_greedy_or_naive():
+    specs_shapes = [
+        ("ijk,mi,nj,pk->mnp", [(4, 5, 6), (30, 4), (31, 5), (32, 6)]),
+        ("mnp,nr,pr->mr", [(20, 21, 22), (21, 4), (22, 4)]),
+        ("ab,bc,cd,de->ae", [(50, 2), (2, 50), (50, 2), (2, 50)]),
+        ("bsd,btd,bte->bse", [(2, 40, 6), (2, 41, 6), (2, 41, 7)]),
+    ]
+    for spec, shapes in specs_shapes:
+        flops = {
+            opt: contraction_path(spec, *shapes, optimize=opt).total_flops
+            for opt in ("naive", "greedy", "optimal")
+        }
+        assert flops["optimal"] <= flops["greedy"], (spec, flops)
+        assert flops["optimal"] <= flops["naive"], (spec, flops)
+
+
+def test_auto_uses_optimal_up_to_limit_then_greedy():
+    small = contraction_path(
+        "ab,bc,cd->ad", (4, 4), (4, 4), (4, 4), optimize="auto")
+    assert small.optimize == "optimal"
+    n = AUTO_OPTIMAL_LIMIT + 1
+    spec = ",".join(chr(ord("a") + i) + chr(ord("a") + i + 1) for i in range(n))
+    spec += f"->a{chr(ord('a') + n)}"
+    shapes = [(3, 3)] * n
+    big = contraction_path(spec, *shapes, optimize="auto")
+    assert big.optimize == "greedy"
+
+
+def test_path_steps_are_layout_aware():
+    """Equal-flop orders are broken by plan quality: no step of the chosen
+    Tucker-reconstruction path is exceptional (each admits a flattened or
+    strided-batched evaluation)."""
+    p = contraction_path(
+        "ijk,mi,nj,pk->mnp", (10, 10, 10), (96, 10), (96, 10), (96, 10),
+        optimize="optimal",
+    )
+    assert all(s.kind != "exceptional" for s in p.steps), p.describe()
+
+
+def test_describe_mentions_every_step():
+    p = contraction_path("ab,bc,cd->ad", (4, 4), (4, 4), (4, 4))
+    text = p.describe()
+    assert "step 1" in text and "step 2" in text and "flops=" in text
+
+
+def test_sum_only_modes_reduced_before_planning():
+    # 'q' appears once and not in the output: summed up front, so the
+    # planned path never carries it.
+    p = contraction_path("aq,ab->b", (3, 9), (3, 4))
+    assert all("q" not in s.spec.spec_str() for s in p.steps)
+    _check("aq,ab->b")
+
+
+# -------------------------------------------- decomposition expressions
+def test_tucker_reconstruction_matches_reference():
+    rng = np.random.default_rng(7)
+    G = jnp.asarray(rng.standard_normal((4, 4, 4)), jnp.float32)
+    A = jnp.asarray(rng.standard_normal((12, 4)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((13, 4)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((14, 4)), jnp.float32)
+    ref = jnp.einsum("ijk,mi,nj,pk->mnp", G, A, B, C)
+    from repro.core.tucker import tucker_reconstruct
+
+    got = tucker_reconstruct(G, (A, B, C))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cp_reconstruction_expression():
+    _check("r,mr,nr,pr->mnp", optimize="optimal")
+    _check("r,mr,nr,pr->mnp", optimize="greedy")

@@ -1,8 +1,15 @@
-"""Property-based tests (hypothesis) for the system's invariants."""
+"""Property-based tests (hypothesis) for the system's invariants.
+
+Skipped wholesale when ``hypothesis`` is not installed (it lives in
+requirements-dev.txt, not the runtime requirements).
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.contract import contract

@@ -7,11 +7,18 @@ import time
 import jax
 import numpy as np
 
-__all__ = ["time_fn", "rand", "emit"]
+__all__ = ["time_fn", "rand", "emit", "QUICK"]
+
+#: CI mode (``benchmarks.run --quick``): clamp repeats so every module
+#: finishes in seconds.  Modules may additionally shrink their sizes via
+#: ``run(quick=...)``.
+QUICK = False
 
 
 def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
     """Median wall-time (µs) of ``fn(*args)`` under jit."""
+    if QUICK:
+        iters, warmup = min(iters, 3), min(warmup, 1)
     jfn = jax.jit(fn)
     for _ in range(warmup):
         jax.block_until_ready(jfn(*args))

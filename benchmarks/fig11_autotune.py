@@ -1,0 +1,83 @@
+"""Fig. 11 (repo extension): analytic-choice vs. tuned-choice dispatch.
+
+For each Table II case, time the analytic ``strategy="auto"`` plan
+against the autotuner's measured winner (warm cache).  The paper's
+Figs. 5–8 show no static rule wins everywhere; this benchmark quantifies
+what the empirical dispatcher buys back — and verifies the acceptance
+bar: with a warm cache, tuned dispatch is never slower than analytic
+beyond noise, and a *second* dispatcher over the same cache file performs
+**zero** new measurements (the ``remeasure_check`` row).
+
+Cache file: ``$REPRO_TUNING_CACHE`` or ``tuning-cache.json`` in the CWD
+(CI uploads it as a build artifact).
+"""
+
+import os
+
+from benchmarks.common import QUICK, rand
+from repro.core.notation import parse_spec
+from repro.core.table2 import CASES
+from repro.tuning import Candidate, Dispatcher
+from repro.tuning.measure import measure_candidates
+
+N = 64
+QUICK_N = 32
+QUICK_LABELS = ["1.1", "1.3", "2.4", "3.4", "4.1", "5.3"]
+
+AUTO = Candidate("auto", "xla")
+
+
+def _operands(rm: str, dims: dict):
+    cs = parse_spec(rm)
+    A = rand(11, [dims[m] for m in cs.a_modes])
+    B = rand(12, [dims[m] for m in cs.b_modes])
+    return cs, A, B
+
+
+def run(quick: bool | None = None):
+    if quick is None:
+        quick = QUICK or os.environ.get("REPRO_BENCH_QUICK") == "1"
+    n = QUICK_N if quick else N
+    labels = QUICK_LABELS if quick else sorted(CASES)
+    dims = {m: n for m in "mnpk"}
+    cache_path = os.environ.get("REPRO_TUNING_CACHE", "tuning-cache.json")
+    # winner selection needs stable medians even in --quick (a noise-driven
+    # pick would fail the never-slower bar), so iters stays at 10; the
+    # sizes, case subset, and verify repeats are what --quick shrinks.
+    disp = Dispatcher(cache_path, iters=10, warmup=2)
+
+    rows = []
+    for label in labels:
+        rm = CASES[label].row_major()
+        cs, A, B = _operands(rm, dims)
+        disp.contract(cs, A, B)  # warm: tunes on miss, no-op on hit
+        cand, _ = disp.lookup(cs, dims, A.dtype)
+        # re-time analytic choice vs winner with the dispatcher's own
+        # interleaved harness (drift-cancelling — essential for a
+        # never-slower check).  When the winner IS the analytic plan the
+        # lowering is identical, so a single measurement serves both.
+        cands = [AUTO] if cand == AUTO else [AUTO, cand]
+        timed = measure_candidates(
+            cands, cs, A, B, iters=5 if quick else 20, warmup=2
+        )
+        t_auto = timed[AUTO.key()].us
+        t_tuned = timed[cand.key()].us
+        rows.append(
+            (f"fig11/case{label}", t_tuned,
+             f"auto_us={t_auto:.1f};choice={cand.key()};"
+             f"speedup={t_auto / t_tuned:.2f}")
+        )
+
+    # acceptance check: a fresh dispatcher over the same cache file must
+    # serve every case without a single new measurement.
+    disp2 = Dispatcher(cache_path)
+    for label in labels:
+        rm = CASES[label].row_major()
+        cs, A, B = _operands(rm, dims)
+        disp2.contract(cs, A, B)
+    rows.append(
+        ("fig11/remeasure_check", 0.0,
+         f"new_measurements={disp2.measurements};hits={disp2.hits};"
+         f"entries={len(disp2.cache)}")
+    )
+    return rows

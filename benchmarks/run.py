@@ -1,13 +1,20 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  Run:
-``PYTHONPATH=src python -m benchmarks.run [--only fig9]``
+``PYTHONPATH=src python -m benchmarks.run [--only fig9] [--quick]``
+
+``--quick`` is the CI profile: repeats are clamped globally
+(``benchmarks.common.QUICK``) and modules whose ``run()`` accepts a
+``quick`` keyword also shrink their problem sizes.
 """
 
 import argparse
+import inspect
+import os
 import sys
 import traceback
 
+from benchmarks import common
 from benchmarks.common import emit
 
 MODULES = [
@@ -19,6 +26,7 @@ MODULES = [
     "fig78_exceptional",
     "fig9_tucker",
     "fig10_nary_path",
+    "fig11_autotune",
     "table2_cases",
 ]
 
@@ -26,7 +34,12 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI profile: fewer repeats, smaller sizes")
     args = ap.parse_args()
+    if args.quick:
+        common.QUICK = True
+        os.environ.setdefault("REPRO_BENCH_QUICK", "1")
     print("name,us_per_call,derived")
     failed = []
     for mod_name in MODULES:
@@ -34,7 +47,10 @@ def main() -> None:
             continue
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
         try:
-            emit(mod.run())
+            if "quick" in inspect.signature(mod.run).parameters:
+                emit(mod.run(quick=args.quick))
+            else:
+                emit(mod.run())
         except Exception:
             failed.append(mod_name)
             traceback.print_exc()

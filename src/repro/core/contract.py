@@ -16,13 +16,22 @@ single entry point for pairwise tensor contractions.  Strategies:
                     form, one flat GEMM, materialized permute back.  Copies
                     are pinned with ``lax.optimization_barrier`` so XLA
                     cannot elide what the paper's baseline pays for.
+* ``"tuned"``     — empirical dispatch through the autotuner
+                    (:mod:`repro.tuning.dispatch`): run the measured
+                    winner when the persistent cache has one, measure on
+                    miss per the dispatcher's policy, fall back to the
+                    analytic ``"auto"`` plan otherwise.
 
 Backends: ``"xla"`` (dot_general / vmap composition) or ``"pallas"``
-(the StridedBatchedGEMM / extended-transpose TPU kernels).
+(the StridedBatchedGEMM / extended-transpose TPU kernels).  With
+``backend="pallas"``, ``tiles={"u"|"v"|"k"|"b": int}`` overrides the
+kernel tile sizes per call (validated; see
+:func:`repro.tuning.candidates.validate_tiles`).
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Literal
 
@@ -36,12 +45,41 @@ from repro.core.planner import Plan, make_plan
 __all__ = [
     "contract",
     "infer_dims",
+    "record_contractions",
     "conventional_transpose_count",
     "count_hlo_ops",
 ]
 
-Strategy = Literal["auto", "flatten", "batched", "direct", "conventional"]
+Strategy = Literal["auto", "flatten", "batched", "direct", "conventional", "tuned"]
 Backend = Literal["xla", "pallas"]
+
+
+# --------------------------------------------------------------------------
+# Working-set recording (used by the serving warm-up / autotuner pretune)
+# --------------------------------------------------------------------------
+
+_ACTIVE_RECORDERS: list[list] = []
+
+
+@contextlib.contextmanager
+def record_contractions():
+    """Record every ``contract`` call in this context (including under a
+    jit/``eval_shape`` trace) as ``(spec_str, dims, dtype_str)`` tuples —
+    the *contraction working set* the autotuner's warm-up pass pre-tunes.
+
+    Yields the list the records accumulate into.
+    """
+    rec: list[tuple] = []
+    _ACTIVE_RECORDERS.append(rec)
+    try:
+        yield rec
+    finally:
+        # remove by identity: equal (e.g. both-empty) nested recorders must
+        # not evict each other
+        for i, r in enumerate(_ACTIVE_RECORDERS):
+            if r is rec:
+                del _ACTIVE_RECORDERS[i]
+                break
 
 
 def infer_dims(spec: ContractionSpec, A, B) -> dict:
@@ -70,6 +108,7 @@ def contract(
     strategy: Strategy = "auto",
     backend: Backend = "xla",
     force_batch: str | None = None,
+    tiles: dict | None = None,
     preferred_element_type=jnp.float32,
     out_dtype=None,
 ):
@@ -85,15 +124,21 @@ def contract(
         operands; no traces, no ellipses; every free mode must appear in
         the output.
       A, B: the operand arrays, ranks matching the spec.
-      strategy: one of the five strategies in the module docstring
+      strategy: one of the six strategies in the module docstring
         (``"auto"``, ``"flatten"``, ``"batched"``, ``"direct"``,
-        ``"conventional"``).  ``"flatten"`` raises ``ValueError`` if the
-        spec admits no flattened single-GEMM evaluation.
+        ``"conventional"``, ``"tuned"``).  ``"flatten"`` raises
+        ``ValueError`` if the spec admits no flattened single-GEMM
+        evaluation; ``"tuned"`` dispatches through the autotuner and
+        ignores ``backend`` (the measured winner carries its own).
       backend: ``"xla"`` (dot_general/vmap composition) or ``"pallas"``
         (StridedBatchedGEMM / extended-transpose kernels; interpret mode
         off-TPU).  Ignored by ``"direct"`` and ``"conventional"``.
       force_batch: pin the strided-batch mode (benchmark use — Fig. 5/6
         compare batching the last vs. the middle output mode).
+      tiles: per-call Pallas tile overrides (role → size for
+        ``u``/``v``/``k``/``b``), validated against divisibility and the
+        VMEM budget; only legal with ``backend="pallas"`` and a planning
+        strategy (``"auto"``/``"flatten"``/``"batched"``).
       preferred_element_type: accumulator dtype passed to ``dot_general``.
       out_dtype: result dtype; defaults to the promoted operand dtype.
 
@@ -103,6 +148,30 @@ def contract(
     cs = parse_spec(spec) if isinstance(spec, str) else spec
     dims = infer_dims(cs, A, B)
     out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
+
+    if _ACTIVE_RECORDERS:
+        rec_dtype = str(jnp.result_type(A.dtype, B.dtype))
+        for rec in _ACTIVE_RECORDERS:
+            rec.append((cs.spec_str(), dict(dims), rec_dtype))
+
+    if strategy == "tuned":
+        if tiles is not None:
+            raise ValueError(
+                "tiles= cannot be combined with strategy='tuned' "
+                "(the tuner owns tile selection)"
+            )
+        from repro.tuning.dispatch import get_dispatcher  # deferred: no cycle
+
+        return get_dispatcher().contract(
+            cs, A, B,
+            preferred_element_type=preferred_element_type, out_dtype=out_dtype,
+        )
+
+    if tiles is not None:
+        if strategy not in ("auto", "flatten", "batched"):
+            raise ValueError(f"tiles= is meaningless for strategy={strategy!r}")
+        if backend != "pallas":
+            raise ValueError("tiles= requires backend='pallas'")
 
     if strategy == "direct":
         out = _direct(cs, A, B, preferred_element_type)
@@ -119,7 +188,16 @@ def contract(
     if backend == "pallas":
         from repro.kernels import ops  # deferred: keeps core importable sans pallas
 
-        return ops.execute_plan(plan, A, B, out_dtype=out_dtype)
+        if tiles is not None:
+            from repro.tuning.candidates import validate_tiles  # no cycle
+
+            eff = dict(tiles)
+            if plan.kind == CaseKind.EXCEPTIONAL and "b" not in eff:
+                # match execute_plan's brick-depth default so the VMEM
+                # check sees the tiles the kernel will actually run with
+                eff["b"] = ops.EXT_BATCH_TILE
+            validate_tiles(eff)
+        return ops.execute_plan(plan, A, B, out_dtype=out_dtype, tiles=tiles)
     return _execute_xla(plan, A, B, preferred_element_type).astype(out_dtype)
 
 

@@ -29,6 +29,9 @@ therefore does three things:
      ``OPTIMAL_MAX_OPERANDS`` operands;
    * ``"auto"``    — ``"optimal"`` for ≤ ``AUTO_OPTIMAL_LIMIT`` operands
      (every expression in this repo), else ``"greedy"``;
+   * ``"tuned"``   — the analytic candidates re-ranked with *measured*
+     step costs from the autotuner cache (:mod:`repro.tuning`), falling
+     back to the flop model for steps without entries;
 
 3. **lower** each pairwise step through the existing
    :func:`repro.core.planner.make_plan` / :func:`~repro.core.contract.contract`
@@ -52,6 +55,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 from typing import Literal
 
 import jax.numpy as jnp
@@ -70,14 +74,21 @@ __all__ = [
     "xeinsum",
 ]
 
-#: hard cap for ``optimize="optimal"`` — the subset DP enumerates 3^n
-#: partitions (3^10 ≈ 59k, still instant; beyond that use "greedy").
+#: default cap for ``optimize="optimal"`` — the subset DP enumerates 3^n
+#: partitions (3^10 ≈ 59k, still instant; beyond that use "greedy" or
+#: "auto").  Override per-process with the ``REPRO_OPTIMAL_MAX_OPERANDS``
+#: environment variable (benchmarking larger networks).
 OPTIMAL_MAX_OPERANDS = 10
 
 #: ``optimize="auto"`` runs the exact DP up to this many operands.
 AUTO_OPTIMAL_LIMIT = 5
 
-Optimize = Literal["auto", "greedy", "optimal", "naive"]
+Optimize = Literal["auto", "greedy", "optimal", "naive", "tuned"]
+
+
+def _optimal_cap() -> int:
+    """Effective operand cap for the exact DP (env-overridable per call)."""
+    return int(os.environ.get("REPRO_OPTIMAL_MAX_OPERANDS", OPTIMAL_MAX_OPERANDS))
 
 
 # --------------------------------------------------------------------------
@@ -311,10 +322,12 @@ def _optimal_path(inputs, output, dims) -> tuple[PathStep, ...]:
     and the largest intermediate as tie-breaks.
     """
     n = len(inputs)
-    if n > OPTIMAL_MAX_OPERANDS:
+    cap = _optimal_cap()
+    if n > cap:
         raise ValueError(
-            f"optimize='optimal' supports ≤ {OPTIMAL_MAX_OPERANDS} operands "
-            f"(got {n}); use optimize='greedy'"
+            f"optimize='optimal' supports ≤ {cap} operands (got {n}); use "
+            f"optimize='greedy' or optimize='auto', or raise the cap via the "
+            f"REPRO_OPTIMAL_MAX_OPERANDS environment variable"
         )
     full = (1 << n) - 1
     # (total_flops, layout_penalty, peak_intermediate, result_modes,
@@ -376,11 +389,49 @@ def _optimal_path(inputs, output, dims) -> tuple[PathStep, ...]:
     return tuple(steps)
 
 
-def _plan_path(spec, inputs, output, dims, optimize) -> ContractionPath:
+def _tuned_path(spec, inputs, output, dims, dtype) -> ContractionPath:
+    """Re-rank candidate paths with *measured* step costs.
+
+    Takes the analytic optimizers' paths (auto's choice plus the greedy and
+    naive alternatives), prices each step from the autotuner's cache where
+    an entry exists — the measured best µs — and from the flop model
+    (bridged by :data:`repro.tuning.dispatch.ANALYTIC_FLOPS_PER_US`)
+    otherwise, then picks the cheapest path.  With an empty cache every
+    step falls back to the analytic price, reproducing ``optimize="auto"``.
+    """
+    from repro.tuning.dispatch import ANALYTIC_FLOPS_PER_US, get_dispatcher
+
+    disp = get_dispatcher()
+    candidates = [_plan_path(spec, inputs, output, dims, "auto")]
+    for method in ("greedy", "naive"):
+        p = _plan_path(spec, inputs, output, dims, method)
+        if all(p.steps != q.steps for q in candidates):
+            candidates.append(p)
+
+    def price(path: ContractionPath):
+        total, measured = 0.0, 0
+        for s in path.steps:
+            us = None
+            if s.spec.c_modes and s.spec.a_modes and s.spec.b_modes:
+                us = disp.step_us(s.spec, dims, dtype)
+            if us is not None:
+                total += us
+                measured += 1
+            else:
+                total += s.flops / ANALYTIC_FLOPS_PER_US
+        return (total, -measured)
+
+    chosen = min(candidates, key=price)
+    return dataclasses.replace(chosen, optimize="tuned")
+
+
+def _plan_path(spec, inputs, output, dims, optimize, *, dtype=None) -> ContractionPath:
     if len(inputs) < 2:
         return ContractionPath(spec, inputs, output, dims, (), str(optimize))
-    if optimize not in ("auto", "greedy", "optimal", "naive"):
+    if optimize not in ("auto", "greedy", "optimal", "naive", "tuned"):
         raise ValueError(f"unknown optimize mode {optimize!r}")
+    if optimize == "tuned":
+        return _tuned_path(spec, inputs, output, dims, dtype or jnp.float32)
     method = optimize
     if optimize == "auto":
         method = "optimal" if len(inputs) <= AUTO_OPTIMAL_LIMIT else "greedy"
@@ -398,7 +449,8 @@ def contraction_path(
 ) -> ContractionPath:
     """Plan (without executing) the pairwise-contraction path for ``spec``.
 
-    ``operands`` may be arrays or bare shape tuples — only shapes are used.
+    ``operands`` may be arrays or bare shape tuples — only shapes are used
+    (plus dtypes, when present, for ``optimize="tuned"`` cache lookups).
     Modes appearing in a single operand and not in the output are summed
     out up front and do not appear in the returned path's steps.
     """
@@ -416,7 +468,9 @@ def contraction_path(
         for s, axes in zip(shapes, reduce_axes)
     ]
     dims = _infer_dims(inputs, shapes)
-    return _plan_path(spec, inputs, output, dims, optimize)
+    dts = [op.dtype for op in operands if hasattr(op, "dtype")]
+    dtype = jnp.result_type(*dts) if dts else jnp.float32
+    return _plan_path(spec, inputs, output, dims, optimize, dtype=dtype)
 
 
 # --------------------------------------------------------------------------
@@ -429,7 +483,7 @@ def _single_operand(modes: str, output: str, x):
     return jnp.transpose(x, [modes.index(m) for m in output])
 
 
-def _pairwise(cs: ContractionSpec, a, b, strategy, backend, prefer):
+def _pairwise(cs: ContractionSpec, a, b, strategy, backend, prefer, tiles=None):
     """Lower one path step through :func:`contract`, softening the strategy
     for steps the pairwise planner cannot express:
 
@@ -437,6 +491,9 @@ def _pairwise(cs: ContractionSpec, a, b, strategy, backend, prefer):
     * ``"flatten"`` on a step that admits no flattened GEMM → ``"auto"``
       (n-ary semantics: flatten *where possible*, unlike strict pairwise
       :func:`contract` which raises).
+
+    ``tiles`` overrides are forwarded only to steps that reach a planning
+    strategy on the Pallas backend (``contract`` rejects them elsewhere).
     """
     eff = strategy
     if not cs.c_modes or a.ndim == 0 or b.ndim == 0:
@@ -444,8 +501,12 @@ def _pairwise(cs: ContractionSpec, a, b, strategy, backend, prefer):
     elif strategy == "flatten":
         if make_plan(cs, infer_dims(cs, a, b)).kind != CaseKind.FLAT_GEMM:
             eff = "auto"
+    step_tiles = tiles
+    if eff not in ("auto", "flatten", "batched") or backend != "pallas":
+        step_tiles = None
     return contract(
-        cs, a, b, strategy=eff, backend=backend, preferred_element_type=prefer
+        cs, a, b, strategy=eff, backend=backend, tiles=step_tiles,
+        preferred_element_type=prefer,
     )
 
 
@@ -455,6 +516,7 @@ def xeinsum(
     optimize: Optimize | ContractionPath = "auto",
     strategy: Strategy | Literal["pallas"] = "auto",
     backend: Backend = "xla",
+    tiles: dict | None = None,
     preferred_element_type=jnp.float32,
     out_dtype=None,
 ):
@@ -467,14 +529,19 @@ def xeinsum(
       spec: einsum string, e.g. ``"mnk,kr,ms->nrs"`` (output may be
         implicit; no ellipses, no traces).
       operands: one array per spec operand.
-      optimize: ``"auto"`` | ``"greedy"`` | ``"optimal"`` | ``"naive"``,
-        or a precomputed :class:`ContractionPath` from
+      optimize: ``"auto"`` | ``"greedy"`` | ``"optimal"`` | ``"naive"`` |
+        ``"tuned"`` (re-rank candidate paths with measured step costs from
+        the autotuner cache where entries exist, analytic flops
+        otherwise), or a precomputed :class:`ContractionPath` from
         :func:`contraction_path` (must match this spec's shapes).
       strategy: per-step evaluation strategy — any
-        :func:`~repro.core.contract.contract` strategy, or ``"pallas"`` as
-        shorthand for ``strategy="auto", backend="pallas"`` (the paper's
-        TPU kernels on every step).
+        :func:`~repro.core.contract.contract` strategy (including
+        ``"tuned"``: each step dispatches through the autotuner), or
+        ``"pallas"`` as shorthand for ``strategy="auto",
+        backend="pallas"`` (the paper's TPU kernels on every step).
       backend: ``"xla"`` or ``"pallas"``.
+      tiles: per-call Pallas tile overrides forwarded to every planning
+        step on the Pallas backend (see :func:`contract`).
       out_dtype: result dtype (default: promoted operand dtype).
 
     Returns:
@@ -486,6 +553,19 @@ def xeinsum(
     out_dtype = out_dtype or jnp.result_type(*arrays)
     if strategy == "pallas":
         strategy, backend = "auto", "pallas"
+    if tiles is not None:
+        # mirror contract()'s rules eagerly — a tiles= override that no
+        # step could honor must error, not silently evaporate
+        if strategy == "tuned":
+            raise ValueError(
+                "tiles= cannot be combined with strategy='tuned' "
+                "(the tuner owns tile selection)"
+            )
+        if backend != "pallas":
+            raise ValueError("tiles= requires backend='pallas'")
+        from repro.tuning.candidates import validate_tiles  # deferred: no cycle
+
+        validate_tiles(tiles)
 
     inputs, output = parse_nary(spec)
     if len(arrays) != len(inputs):
@@ -512,13 +592,16 @@ def xeinsum(
                 f"not {inputs}->{output}"
             )
     else:
-        path = _plan_path(spec, inputs, output, dims, optimize)
+        path = _plan_path(
+            spec, inputs, output, dims, optimize,
+            dtype=jnp.result_type(*arrays),
+        )
 
     env = dict(enumerate(arrays))
     for step in path.steps:
         a, b = env.pop(step.lhs), env.pop(step.rhs)
         env[step.out] = _pairwise(
-            step.spec, a, b, strategy, backend, preferred_element_type
+            step.spec, a, b, strategy, backend, preferred_element_type, tiles
         )
     (result,) = env.values()
     return result.astype(out_dtype)

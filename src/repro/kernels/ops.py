@@ -17,7 +17,7 @@ from repro.core.notation import CaseKind
 from repro.core.planner import Plan
 from repro.kernels.sb_gemm import DEFAULT_TILES, sb_gemm_pallas
 
-__all__ = ["execute_plan", "sb_contract", "EXT_BATCH_TILE"]
+__all__ = ["execute_plan", "sb_contract", "plan_roles", "padded_dim", "EXT_BATCH_TILE"]
 
 #: brick depth for the extended-transpose kernel (paper §III-E): how many
 #: stride-1-batched matrices are staged in VMEM per load.
@@ -31,8 +31,41 @@ def _pad_to(x, modes: str, targets: dict):
     return x
 
 
-def _padded_dim(d: int, tile: int) -> int:
+def padded_dim(d: int, tile: int) -> int:
+    """Dim after padding to a tile multiple (dims ≤ one tile stay as-is)."""
     return d if d <= tile else -(-d // tile) * tile
+
+
+_padded_dim = padded_dim  # historical alias
+
+
+def plan_roles(plan: Plan) -> dict | None:
+    """Mode→role (u/v/k/b) assignment for the Pallas core of ``plan``.
+
+    Returns ``None`` when the plan has no single-kernel Pallas lowering —
+    degenerate layouts and multi-mode contractions whose k-modes could not
+    be fused into one view both fall back to the XLA executor.  Shared by
+    :func:`execute_plan` and the autotuner's candidate enumeration
+    (:mod:`repro.tuning.candidates`).
+    """
+    fs = plan.fspec
+    kgroup = fs.contracted
+    if "degenerate" in plan.notes or len(kgroup) != 1:
+        return None
+    roles = {kgroup: "k"}
+    if plan.gemm_modes is not None:
+        u, v, _ = plan.gemm_modes
+        if u:
+            roles[u] = "u"
+        roles[v] = "v"
+    else:  # pure GEMM: assign from the (≤2-mode) output
+        cm = fs.c_modes
+        roles[cm[-1]] = "v"
+        if len(cm) == 2:
+            roles[cm[0]] = "u"
+    if plan.sb_batch:
+        roles[plan.sb_batch] = "b"
+    return roles
 
 
 def sb_contract(
@@ -65,8 +98,15 @@ def sb_contract(
     return out[slicer]
 
 
-def execute_plan(plan: Plan, A, B, *, out_dtype=None, interpret: bool = True):
-    """Pallas-backend execution of a planner :class:`Plan`."""
+def execute_plan(plan: Plan, A, B, *, out_dtype=None, interpret: bool = True,
+                 tiles: dict | None = None):
+    """Pallas-backend execution of a planner :class:`Plan`.
+
+    ``tiles`` overrides individual role tile sizes (``u``/``v``/``k``/``b``)
+    on top of :data:`~repro.kernels.sb_gemm.DEFAULT_TILES` (and the
+    extended-transpose brick depth for exceptional plans) — the autotuner's
+    knob, also reachable from the public API via ``contract(..., tiles=...)``.
+    """
     fs, fd = plan.fspec, plan.fdims
     out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
 
@@ -81,32 +121,20 @@ def execute_plan(plan: Plan, A, B, *, out_dtype=None, interpret: bool = True):
     if plan.spec.b_modes != fs.b_modes:
         B = B.reshape(tuple(fd[m] for m in fs.b_modes))
 
-    kgroup = fs.contracted
-    if len(kgroup) != 1:
+    roles = plan_roles(plan)
+    if roles is None:
         # multi-mode contraction whose k-modes could not be fused into one
         # view — no single MXU k axis exists; fall back to the XLA executor.
         from repro.core.contract import _execute_xla
 
         return _execute_xla(plan, A, B, jnp.float32).astype(out_dtype)
 
-    # mode → kernel role for the core problem
-    roles = {kgroup: "k"}
-    if plan.gemm_modes is not None:
-        u, v, _ = plan.gemm_modes
-        if u:
-            roles[u] = "u"
-        roles[v] = "v"
-    else:  # pure GEMM: assign from the (≤2-mode) output
-        cm = fs.c_modes
-        roles[cm[-1]] = "v"
-        if len(cm) == 2:
-            roles[cm[0]] = "u"
-    if plan.sb_batch:
-        roles[plan.sb_batch] = "b"
-
-    tiles = dict(DEFAULT_TILES)
+    eff_tiles = dict(DEFAULT_TILES)
     if plan.kind == CaseKind.EXCEPTIONAL:
-        tiles["b"] = EXT_BATCH_TILE  # 3D brick: the extended transpose op
+        eff_tiles["b"] = EXT_BATCH_TILE  # 3D brick: the extended transpose op
+    if tiles:
+        eff_tiles.update(tiles)
+    tiles = eff_tiles
 
     def core(a, b, a_modes, b_modes, c_modes):
         return sb_contract(

@@ -25,12 +25,26 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--pretune", action="store_true",
+                    help="autotune the model's contraction working set "
+                         "before serving (warm start for strategy='tuned')")
+    ap.add_argument("--tuning-cache", default=None,
+                    help="tuning-cache JSON path (default: "
+                         "$REPRO_TUNING_CACHE or ~/.cache/repro/tuning.json)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    t0 = time.perf_counter()
+    engine = ServeEngine(
+        cfg, params, slots=args.slots, max_len=args.max_len,
+        pretune=args.pretune, tuning_cache=args.tuning_cache,
+    )
+    if args.pretune:
+        print(f"pretune: {engine.pretune_stats} "
+              f"({time.perf_counter() - t0:.1f}s, "
+              f"dispatcher {engine.tuner.stats})")
 
     rng = np.random.default_rng(0)
     reqs = [

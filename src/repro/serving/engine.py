@@ -7,6 +7,20 @@ lengths decode step-locked in one vmapped ``decode_step`` — the
 slot-batched variant of continuous batching.  ``serve_step`` therefore
 matches the assignment's ``decode_*`` shapes: one new token per slot
 against that slot's cache.
+
+With ``pretune=True`` the engine runs an autotuning warm-up before
+accepting traffic: it traces decode and prefill (at each prompt-length
+bucket in ``pretune_prompt_lens``) under
+:func:`repro.core.contract.record_contractions` to capture the model's
+*contraction working set* (every ``contract`` the forward passes issue,
+at serving shapes), then measures and caches the fastest execution mode
+for each via :class:`repro.tuning.dispatch.Dispatcher`.  Decode shapes
+are static, so the steady-state decode loop is fully covered; prefill
+cache keys include the prompt length, so prefill is covered exactly at
+the tuned buckets (other lengths fall back to the analytic plan — misses
+inside jit never trigger measurement).  Models configured with
+``contract_strategy="tuned"`` then dispatch straight to measured
+winners.
 """
 
 from __future__ import annotations
@@ -35,7 +49,10 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 1024, greedy: bool = True):
+                 max_len: int = 1024, greedy: bool = True,
+                 pretune: bool = False, tuner=None,
+                 tuning_cache=None,
+                 pretune_prompt_lens: tuple[int, ...] = (8, 16, 32)):
         if cfg.encoder_only:
             raise ValueError(f"{cfg.arch_id} is encoder-only; nothing to serve")
         self.cfg, self.params = cfg, params
@@ -50,16 +67,62 @@ class ServeEngine:
         )
         self.active: dict[int, Request] = {}   # slot -> request
         self._free = list(range(slots))
-        self._decode = jax.jit(
-            jax.vmap(
-                lambda p, c, t: decode_step(cfg, p, c, t),
-                in_axes=(None, 0, 0),
-            )
+        decode_fn = jax.vmap(
+            lambda p, c, t: decode_step(cfg, p, c, t), in_axes=(None, 0, 0)
         )
-        self._prefill = jax.jit(
-            lambda p, toks, c: prefill(cfg, p, {"tokens": toks}, c)
-        )
+        prefill_fn = lambda p, toks, c: prefill(cfg, p, {"tokens": toks}, c)
+        self._decode_fn, self._prefill_fn = decode_fn, prefill_fn
+        self._decode = jax.jit(decode_fn)
+        self._prefill = jax.jit(prefill_fn)
         self._tokens = np.zeros((slots, 1, 1), np.int32)
+        self.tuner = tuner
+        self.pretune_stats: dict | None = None
+        if pretune:
+            self.pretune_stats = self.warmup_tuning(
+                tuner=tuner, tuning_cache=tuning_cache,
+                prompt_lens=pretune_prompt_lens,
+            )
+
+    # ----------------------------------------------------------- autotuning
+    def contraction_working_set(
+        self, prompt_lens: tuple[int, ...] = (8, 16, 32)
+    ) -> list[tuple]:
+        """The ``(spec, dims, dtype)`` set of decode + bucketed prefills.
+
+        Traced abstractly (``jax.eval_shape`` — no FLOPs run), so this is
+        cheap even for large models.  Decode shapes are prompt-independent;
+        prefill shapes carry the prompt length, so one trace per
+        ``prompt_lens`` bucket.
+        """
+        from repro.core.contract import record_contractions
+
+        one = init_cache(self.cfg, 1, self.max_len)
+        step = jnp.zeros((self.slots, 1, 1), jnp.int32)
+        with record_contractions() as rec:
+            jax.eval_shape(self._decode_fn, self.params, self.cache, step)
+            for plen in dict.fromkeys(min(p, self.max_len) for p in prompt_lens):
+                toks = jnp.zeros((1, plen), jnp.int32)
+                jax.eval_shape(self._prefill_fn, self.params, toks, one)
+        return rec
+
+    def warmup_tuning(self, *, tuner=None, tuning_cache=None,
+                      prompt_lens: tuple[int, ...] = (8, 16, 32)) -> dict:
+        """Pre-tune the model's contraction working set before serving.
+
+        Measures (and persists, when the dispatcher's cache has a path)
+        the fastest execution mode for every distinct contraction the
+        model issues at serving shapes.  Returns the pretune stats dict;
+        the dispatcher is kept on ``self.tuner``.
+        """
+        if tuner is None:
+            from repro.tuning.dispatch import Dispatcher, get_dispatcher
+
+            tuner = (
+                Dispatcher(tuning_cache) if tuning_cache is not None
+                else get_dispatcher()
+            )
+        self.tuner = tuner
+        return tuner.pretune(self.contraction_working_set(prompt_lens))
 
     # ------------------------------------------------------------- admit
     def admit(self, req: Request) -> bool:

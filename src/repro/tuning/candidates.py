@@ -1,0 +1,257 @@
+"""Legal execution candidates for one pairwise contraction.
+
+The paper's Figs. 5–8 show that the fastest evaluation mode — flattened
+GEMM, StridedBatchedGEMM over one batch mode or another, or the
+exceptional (extended-transpose) kernel — depends on the shape, and no
+static rule picks the winner everywhere (Peise et al. 2014 measure the
+same for analytic prediction models).  The autotuner therefore treats
+plan selection as an empirical search: this module enumerates the finite
+set of *legal* ways to run a :class:`~repro.core.notation.ContractionSpec`
+at given dims/dtype — strategy × backend × (for Pallas) a small grid of
+tile configurations validated against the VMEM budget — and
+:mod:`repro.tuning.measure` times them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.notation import CaseKind, ContractionSpec, parse_spec
+from repro.core.planner import Plan, make_plan
+from repro.kernels.ops import EXT_BATCH_TILE, padded_dim, plan_roles
+from repro.kernels.sb_gemm import DEFAULT_TILES
+
+__all__ = [
+    "Candidate",
+    "enumerate_candidates",
+    "validate_tiles",
+    "estimate_vmem_bytes",
+    "VMEM_BUDGET_BYTES",
+    "PALLAS_TILE_GRID",
+    "EXT_BRICK_GRID",
+]
+
+#: per-candidate VMEM budget for the (A, B, C, f32 accumulator) blocks.
+#: TPU cores have ~16 MiB of VMEM; half is left for double-buffering and
+#: compiler scratch, matching the sizing guidance in the Pallas guide.
+VMEM_BUDGET_BYTES = 8 * 2**20
+
+#: the Pallas tile-config grid: overrides merged over ``DEFAULT_TILES``.
+#: Deliberately small — the measurement harness multiplies it by the
+#: number of strategies, and configs that clamp to identical effective
+#: tiles for the given dims are deduplicated before timing.
+PALLAS_TILE_GRID = (
+    {},                        # DEFAULT_TILES: 128³ (the MXU-native tile)
+    {"u": 256},
+    {"k": 256},
+    {"u": 64, "k": 64},
+    {"u": 512, "k": 64},
+)
+
+#: brick depths tried for exceptional plans (the extended-transpose 3D
+#: tile of the stride-1-batched operand, paper §III-E).
+EXT_BRICK_GRID = (4, EXT_BATCH_TILE, 16)
+
+_ROLE_NAMES = ("u", "v", "k", "b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One executable configuration: how to run a contraction.
+
+    ``tiles`` is a sorted item tuple (hashable; empty for XLA backends) of
+    role→tile overrides applied on top of the kernel defaults.
+    """
+
+    strategy: str                               # auto | flatten | batched | direct
+    backend: str                                # xla | pallas
+    tiles: tuple[tuple[str, int], ...] = ()
+
+    @property
+    def tiles_dict(self) -> dict:
+        return dict(self.tiles)
+
+    def key(self) -> str:
+        """Stable string form used as the cache's result key."""
+        base = f"{self.backend}:{self.strategy}"
+        if self.tiles:
+            body = ",".join(f"{r}={t}" for r, t in self.tiles)
+            base += f"[{body}]"
+        return base
+
+    @classmethod
+    def from_key(cls, key: str) -> "Candidate":
+        tiles: tuple[tuple[str, int], ...] = ()
+        if "[" in key:
+            key, _, body = key.partition("[")
+            body = body.rstrip("]")
+            tiles = tuple(
+                (r, int(t)) for r, t in (item.split("=") for item in body.split(","))
+            )
+        backend, _, strategy = key.partition(":")
+        if not strategy or backend not in ("xla", "pallas"):
+            raise ValueError(f"malformed candidate key {key!r}")
+        return cls(strategy=strategy, backend=backend, tiles=tiles)
+
+
+def validate_tiles(tiles: dict) -> None:
+    """Validate a user/tuner tile override; raises ``ValueError``.
+
+    Rules: keys must be kernel roles (``u``/``v``/``k``/``b``); values
+    positive ints; ``u``/``v``/``k`` multiples of 8 (the TPU sublane
+    granularity — non-divisible tiles force masked partial lanes the MXU
+    loader rejects); and the implied VMEM working set (A, B, C blocks plus
+    the f32 accumulator, conservatively at the requested — unclamped —
+    tile sizes) must fit :data:`VMEM_BUDGET_BYTES`.
+    """
+    bad = set(tiles) - set(_ROLE_NAMES)
+    if bad:
+        raise ValueError(
+            f"unknown tile roles {sorted(bad)}; valid roles are {_ROLE_NAMES}"
+        )
+    for role, t in tiles.items():
+        if not isinstance(t, int) or isinstance(t, bool) or t < 1:
+            raise ValueError(f"tile {role}={t!r} must be a positive int")
+        if role in ("u", "v", "k") and t % 8 != 0:
+            raise ValueError(
+                f"tile {role}={t} is not divisible by 8 (TPU sublane granularity)"
+            )
+    full = {**DEFAULT_TILES, **tiles}
+    u, v, k, b = (full[r] for r in _ROLE_NAMES)
+    # worst-case blocks: A=(b,u,k), B=(b,k,v), C=(b,u,v) + f32 accumulator
+    bytes_needed = b * (u * k + k * v + u * v) * 4 + b * u * v * 4
+    if bytes_needed > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"tiles {full} are oversized: ~{bytes_needed / 2**20:.1f} MiB of VMEM "
+            f"blocks exceeds the {VMEM_BUDGET_BYTES / 2**20:.0f} MiB budget"
+        )
+
+
+def estimate_vmem_bytes(plan: Plan, roles: dict, tiles: dict, dtype) -> int:
+    """VMEM bytes for one grid step of ``plan`` under ``tiles``.
+
+    Sums the A/B/C blocks (operand dtype) and the f32 accumulator, with
+    each tile clamped to the padded mode dim exactly as the kernel's
+    BlockSpecs do.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    fd = plan.fdims
+
+    def block_elems(modes: str) -> int:
+        n = 1
+        for m in modes:
+            if m not in roles:
+                continue  # nested batch mode: vmapped outside the kernel
+            tile = tiles[roles[m]]
+            n *= min(tile, padded_dim(fd[m], tile))
+        return n
+
+    fs = plan.fspec
+    a = block_elems(fs.a_modes)
+    b = block_elems(fs.b_modes)
+    c = block_elems(fs.c_modes)
+    return (a + b) * itemsize + c * itemsize + c * 4
+
+
+def _effective_tiles(plan: Plan, roles: dict, tiles: dict) -> tuple:
+    """Tiles after clamping to padded dims — the dedup signature."""
+    out = {}
+    all_modes = plan.fspec.a_modes + plan.fspec.b_modes + plan.fspec.c_modes
+    for m in dict.fromkeys(all_modes):
+        r = roles.get(m)
+        if r is None:
+            continue  # nested batch mode: vmapped outside the kernel
+        out[r] = min(tiles[r], padded_dim(plan.fdims[m], tiles[r]))
+    return tuple(sorted(out.items()))
+
+
+def default_backends() -> tuple[str, ...]:
+    """Backends worth measuring on this host.
+
+    Pallas kernels run in *interpret* mode off-TPU — orders of magnitude
+    slower than XLA and never the winner — so CPU/GPU hosts only tune the
+    XLA candidates by default.  Pass ``backends=`` explicitly to override
+    (tests do, with tiny shapes).
+    """
+    return ("xla", "pallas") if jax.default_backend() == "tpu" else ("xla",)
+
+
+def _plans_differ(p: Plan, q: Plan) -> bool:
+    return (p.kind, p.flatten_groups, p.sb_batch, p.nested) != (
+        q.kind, q.flatten_groups, q.sb_batch, q.nested
+    )
+
+
+def enumerate_candidates(
+    spec: str | ContractionSpec,
+    dims: dict,
+    *,
+    dtype=jnp.float32,
+    backends: tuple[str, ...] | None = None,
+) -> list[Candidate]:
+    """All legal execution candidates for ``spec`` at ``dims``/``dtype``.
+
+    XLA candidates: ``"auto"`` (Algorithm 2 with flattening), ``"batched"``
+    (only when it plans differently from auto), and ``"direct"`` (the
+    good-XLA-user reference).  Pallas candidates: each distinct plan ×
+    each tile config from :data:`PALLAS_TILE_GRID` (brick depths from
+    :data:`EXT_BRICK_GRID` for exceptional plans) that clamps to a unique
+    effective tiling and fits the VMEM budget.
+    """
+    cs = parse_spec(spec) if isinstance(spec, str) else spec
+    if backends is None:
+        backends = default_backends()
+
+    if not cs.c_modes or not cs.a_modes or not cs.b_modes:
+        # scalar input/output: no matrix core exists — direct is the only
+        # evaluation (and the planner would reject the spec).
+        return [Candidate("direct", "xla")]
+
+    plan_auto = make_plan(cs, dims)
+    plan_noflat = make_plan(cs, dims, allow_flatten=False)
+
+    out = [Candidate("auto", "xla")]
+    if _plans_differ(plan_auto, plan_noflat):
+        out.append(Candidate("batched", "xla"))
+    out.append(Candidate("direct", "xla"))
+
+    if "pallas" in backends:
+        seen: set[tuple] = set()
+        strat_plans = [("auto", plan_auto)]
+        if _plans_differ(plan_auto, plan_noflat):
+            strat_plans.append(("batched", plan_noflat))
+        for strategy, plan in strat_plans:
+            roles = plan_roles(plan)
+            if roles is None:
+                continue  # no single-kernel Pallas lowering for this plan
+            bricks = (
+                EXT_BRICK_GRID if plan.kind == CaseKind.EXCEPTIONAL else (None,)
+            )
+            for grid_cfg in PALLAS_TILE_GRID:
+                for brick in bricks:
+                    cfg = dict(grid_cfg)
+                    if brick is not None:  # exceptional: explicit brick depth
+                        cfg["b"] = brick
+                    tiles = {**DEFAULT_TILES, **cfg}
+                    eff = _effective_tiles(plan, roles, tiles)
+                    if (strategy, eff) in seen:
+                        continue
+                    seen.add((strategy, eff))
+                    try:
+                        # the same gate contract(tiles=...) applies — a
+                        # candidate must never be rejected at execution time
+                        validate_tiles(cfg)
+                    except ValueError:
+                        continue
+                    if (
+                        estimate_vmem_bytes(plan, roles, tiles, dtype)
+                        > VMEM_BUDGET_BYTES
+                    ):
+                        continue
+                    out.append(
+                        Candidate(strategy, "pallas", tuple(sorted(cfg.items())))
+                    )
+    return out

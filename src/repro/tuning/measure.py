@@ -1,0 +1,121 @@
+"""Timing harness for contraction candidates.
+
+Wall-clock measurement of jitted callables: warmup runs (absorbing
+compilation), then median-of-k timed runs with ``block_until_ready`` —
+the same discipline as :mod:`benchmarks.common`, packaged as a library so
+the dispatcher, the serving warm-up pass, and the fig11 benchmark share
+one clock.  Optionally audits the optimized HLO for surviving transposes
+(the paper's Fig. 1 cost: a candidate that wins on time but re-introduces
+materialized copies is worth flagging).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.tuning.candidates import Candidate
+
+__all__ = ["Measurement", "time_callable", "measure_candidate", "measure_candidates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """One timed candidate: median µs over ``iters`` post-warmup runs."""
+
+    us: float
+    iters: int
+    warmup: int
+    transposes: int | None = None   # optimized-HLO transpose count (audit)
+
+
+def time_callable(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time (µs) of ``jit(fn)(*args)`` after ``warmup`` runs."""
+    jfn = jax.jit(fn)
+    for _ in range(warmup):
+        jax.block_until_ready(jfn(*args))
+    ts = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def measure_candidate(
+    cand: Candidate,
+    spec,
+    A,
+    B,
+    *,
+    iters: int = 5,
+    warmup: int = 2,
+    audit_transposes: bool = False,
+) -> Measurement:
+    """Time one :class:`Candidate` on concrete operands.
+
+    Builds the ``contract`` call the candidate describes, jits it, and
+    measures.  With ``audit_transposes`` the optimized HLO of the same
+    lowering is scanned via
+    :func:`repro.core.contract.count_hlo_ops` and the transpose count is
+    attached to the result.
+    """
+    from repro.core.contract import contract, count_hlo_ops
+
+    tiles = cand.tiles_dict or None
+
+    def fn(a, b):
+        return contract(
+            spec, a, b, strategy=cand.strategy, backend=cand.backend, tiles=tiles
+        )
+
+    us = time_callable(fn, A, B, iters=iters, warmup=warmup)
+    transposes = None
+    if audit_transposes:
+        transposes = count_hlo_ops(fn, A, B, ops=("transpose",))["transpose"]
+    return Measurement(us=us, iters=iters, warmup=warmup, transposes=transposes)
+
+
+def measure_candidates(
+    cands,
+    spec,
+    A,
+    B,
+    *,
+    iters: int = 5,
+    warmup: int = 2,
+) -> dict[str, Measurement]:
+    """Time a whole candidate set with *interleaved* sampling.
+
+    All candidates are jitted and warmed first, then samples alternate
+    round-robin across them — so slow machine drift (other tenants, turbo
+    states) hits every candidate equally instead of biasing whichever was
+    timed last.  Returns ``{candidate.key(): Measurement}``.
+    """
+    from repro.core.contract import contract
+
+    def make_fn(c: Candidate):
+        tiles = c.tiles_dict or None
+        return jax.jit(
+            lambda a, b: contract(
+                spec, a, b, strategy=c.strategy, backend=c.backend, tiles=tiles
+            )
+        )
+
+    fns = [(c.key(), make_fn(c)) for c in cands]
+    for _, f in fns:
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(f(A, B))
+    samples: dict[str, list[float]] = {k: [] for k, _ in fns}
+    for _ in range(max(iters, 1)):
+        for k, f in fns:
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(A, B))
+            samples[k].append((time.perf_counter() - t0) * 1e6)
+    return {
+        k: Measurement(us=float(np.median(ts)), iters=iters, warmup=warmup)
+        for k, ts in samples.items()
+    }

@@ -1,0 +1,379 @@
+"""Autotuner subsystem: candidates, measurement, cache durability, dispatch.
+
+All tests run XLA-only candidates at tiny sizes (Pallas interpret mode is
+exercised separately via the tiles-plumbing tests) so the module stays
+fast on CPU CI.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.tuning.dispatch as dispatch_mod
+from repro.core.contract import contract, record_contractions
+from repro.core.einsum import contraction_path, xeinsum
+from repro.core.notation import parse_spec
+from repro.tuning import (
+    SCHEMA_VERSION,
+    Candidate,
+    Dispatcher,
+    TuningCache,
+    canonical_key,
+    enumerate_candidates,
+    set_dispatcher,
+    tuned_contract,
+    validate_tiles,
+)
+
+SPEC = "mk,pkn->pmn"
+DIMS = {"m": 12, "k": 16, "p": 4, "n": 8}
+
+
+def _operands(spec=SPEC, dims=DIMS, dtype=jnp.float32, seed=0):
+    cs = parse_spec(spec)
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.standard_normal([dims[m] for m in cs.a_modes]), dtype)
+    B = jnp.asarray(rng.standard_normal([dims[m] for m in cs.b_modes]), dtype)
+    return A, B
+
+
+def _disp(cache=None, **kw):
+    kw.setdefault("backends", ("xla",))
+    kw.setdefault("iters", 1)
+    kw.setdefault("warmup", 1)
+    return Dispatcher(cache, **kw)
+
+
+@pytest.fixture(autouse=True)
+def _no_global_dispatcher():
+    set_dispatcher(None)
+    yield
+    set_dispatcher(None)
+
+
+# ---------------------------------------------------------------- candidates
+def test_candidates_all_execute_and_agree():
+    A, B = _operands()
+    ref = jnp.einsum(SPEC, A, B)
+    cands = enumerate_candidates(SPEC, DIMS, backends=("xla", "pallas"))
+    assert any(c.backend == "pallas" for c in cands)
+    for c in cands:
+        got = contract(SPEC, A, B, strategy=c.strategy, backend=c.backend,
+                       tiles=c.tiles_dict or None)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_candidate_key_round_trip():
+    for c in enumerate_candidates(SPEC, DIMS, backends=("xla", "pallas")):
+        assert Candidate.from_key(c.key()) == c
+
+
+def test_candidates_scalar_spec_degrades_to_direct():
+    cands = enumerate_candidates("k,k->", {"k": 7}, backends=("xla", "pallas"))
+    assert cands == [Candidate("direct", "xla")]
+
+
+def test_all_pallas_candidates_pass_contract_validation():
+    # a candidate the enumerator emits must never be rejected at execution
+    # time — contract(tiles=...) applies validate_tiles to the raw override
+    from repro.core.table2 import CASES
+
+    for label in ("1.3", "3.4"):  # sb_gemm and exceptional regimes
+        rm = CASES[label].row_major()
+        cs = parse_spec(rm)
+        dims = {m: 256 if m in "kn" else 32 for m in set(cs.a_modes + cs.b_modes)}
+        for c in enumerate_candidates(rm, dims, backends=("xla", "pallas")):
+            if c.tiles:
+                validate_tiles(c.tiles_dict)  # must not raise
+
+
+def test_exceptional_case_gets_brick_candidates():
+    # row-major mirror of Table II case 3.4 plans as exceptional
+    from repro.core.table2 import CASES
+
+    rm = CASES["3.4"].row_major()
+    cs = parse_spec(rm)
+    dims = {m: 16 for m in set(cs.a_modes + cs.b_modes)}
+    cands = enumerate_candidates(rm, dims, backends=("xla", "pallas"))
+    bricks = {dict(c.tiles).get("b") for c in cands if c.backend == "pallas"}
+    assert len(bricks) > 1  # more than one brick depth survived VMEM checks
+
+
+# --------------------------------------------------------------------- tiles
+def test_tiles_plumbing_end_to_end():
+    A, B = _operands()
+    ref = jnp.einsum(SPEC, A, B)
+    got = contract(SPEC, A, B, strategy="batched", backend="pallas",
+                   tiles={"u": 16, "v": 8, "k": 8})
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    got = xeinsum(SPEC, A, B, strategy="batched", backend="pallas",
+                  tiles={"u": 16})
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("tiles,msg", [
+    ({"q": 8}, "unknown tile roles"),
+    ({"u": 0}, "positive int"),
+    ({"u": 8.0}, "positive int"),
+    ({"k": 12}, "not divisible by 8"),
+    ({"u": 4096, "v": 4096, "k": 4096}, "oversized"),
+])
+def test_tiles_validation_errors(tiles, msg):
+    A, B = _operands()
+    with pytest.raises(ValueError, match=msg):
+        contract(SPEC, A, B, strategy="batched", backend="pallas", tiles=tiles)
+
+
+def test_tiles_require_pallas_and_planning_strategy():
+    A, B = _operands()
+    with pytest.raises(ValueError, match="backend='pallas'"):
+        contract(SPEC, A, B, strategy="batched", tiles={"u": 8})
+    with pytest.raises(ValueError, match="meaningless"):
+        contract(SPEC, A, B, strategy="direct", backend="pallas", tiles={"u": 8})
+    with pytest.raises(ValueError, match="tuned"):
+        contract(SPEC, A, B, strategy="tuned", tiles={"u": 8})
+    validate_tiles({"u": 64, "v": 128, "k": 8, "b": 2})  # legal: no raise
+
+
+def test_xeinsum_rejects_misplaced_tiles():
+    A, B = _operands()
+    with pytest.raises(ValueError, match="backend='pallas'"):
+        xeinsum(SPEC, A, B, tiles={"u": 8})  # default backend is xla
+    with pytest.raises(ValueError, match="tuned"):
+        xeinsum(SPEC, A, B, strategy="tuned", tiles={"u": 8})
+    with pytest.raises(ValueError, match="not divisible by 8"):
+        xeinsum(SPEC, A, B, strategy="batched", backend="pallas",
+                tiles={"u": 9})
+
+
+def test_exceptional_tiles_validated_at_kernel_brick_depth():
+    # tiles that fit VMEM at b=1 must still be rejected when the plan is
+    # exceptional (execute_plan defaults the brick depth to 8)
+    from repro.core.table2 import CASES
+
+    rm = CASES["3.4"].row_major()
+    cs = parse_spec(rm)
+    dims = {m: 16 for m in set(cs.a_modes + cs.b_modes)}
+    A, B = _operands(rm, dims)
+    tiles = {"u": 512, "v": 512, "k": 64}
+    validate_tiles(tiles)  # fits at b=1
+    with pytest.raises(ValueError, match="oversized"):
+        contract(rm, A, B, strategy="batched", backend="pallas", tiles=tiles)
+
+
+# --------------------------------------------------------------------- cache
+def test_cache_round_trip(tmp_path):
+    path = tmp_path / "t.json"
+    c1 = TuningCache(path)
+    entry = {"best": "xla:auto", "results": {"xla:auto": 12.5, "xla:direct": 20.0}}
+    c1.put("k1", entry)
+    c2 = TuningCache(path)
+    assert c2.get("k1") == entry
+    assert "k1" in c2 and len(c2) == 1
+
+
+def test_cache_atomic_write_survives_crash(tmp_path, monkeypatch):
+    path = tmp_path / "t.json"
+    c1 = TuningCache(path)
+    good = {"best": "xla:auto", "results": {"xla:auto": 1.0}}
+    c1.put("k1", good)
+
+    monkeypatch.setattr(os, "replace",
+                        lambda *a, **k: (_ for _ in ()).throw(OSError("crash")))
+    with pytest.raises(OSError):
+        c1.put("k2", {"best": "xla:auto", "results": {"xla:auto": 2.0}})
+    monkeypatch.undo()
+
+    # the file on disk is the last complete snapshot — parseable, k1 intact
+    c2 = TuningCache(path)
+    assert c2.get("k1") == good
+    assert "k2" not in c2
+
+
+def test_cache_corrupted_file_degrades_to_empty(tmp_path):
+    path = tmp_path / "t.json"
+    path.write_text("{not json!!")
+    with pytest.warns(UserWarning, match="unreadable"):
+        c = TuningCache(path)
+    assert len(c) == 0
+
+
+def test_cache_old_schema_degrades_to_empty(tmp_path):
+    path = tmp_path / "t.json"
+    path.write_text(json.dumps({"schema": SCHEMA_VERSION + 1, "entries": {"k": {}}}))
+    with pytest.warns(UserWarning, match="schema"):
+        c = TuningCache(path)
+    assert len(c) == 0
+
+
+def test_cache_malformed_entries_dropped(tmp_path):
+    path = tmp_path / "t.json"
+    good = {"best": "xla:auto", "results": {"xla:auto": 1.0}}
+    path.write_text(json.dumps({
+        "schema": SCHEMA_VERSION,
+        "entries": {
+            "ok": good,
+            "bad": {"results": "nope"},
+            # "best" not among the results: lookup would KeyError
+            "dangling": {"best": "xla:direct", "results": {"xla:auto": 5.0}},
+            # "best" not a parseable candidate key: lookup would ValueError
+            "garbage": {"best": "garbage", "results": {"garbage": 5.0}},
+        },
+    }))
+    with pytest.warns(UserWarning, match="malformed"):
+        c = TuningCache(path)
+    assert c.get("ok") == good
+    assert "bad" not in c and "dangling" not in c and "garbage" not in c
+
+
+# ------------------------------------------------------------------ dispatch
+def test_tuned_contract_correct_and_counts(tmp_path):
+    A, B = _operands()
+    ref = jnp.einsum(SPEC, A, B)
+    d = _disp(tmp_path / "t.json")
+    got = tuned_contract(SPEC, A, B, dispatcher=d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert d.misses == 1 and d.measurements > 0
+    tuned_contract(SPEC, A, B, dispatcher=d)
+    assert d.hits == 1
+
+
+def test_cache_hit_short_circuits_measurement(tmp_path, monkeypatch):
+    path = tmp_path / "t.json"
+    A, B = _operands()
+    _disp(path).contract(SPEC, A, B)  # warm the cache file
+
+    d2 = _disp(path)
+    monkeypatch.setattr(
+        dispatch_mod, "measure_candidates",
+        lambda *a, **k: pytest.fail("measurer called despite cache hit"),
+    )
+    got = d2.contract(SPEC, A, B)
+    assert d2.hits == 1 and d2.measurements == 0
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.einsum(SPEC, A, B)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_policy_cached_never_measures():
+    A, B = _operands()
+    d = _disp(None, policy="cached")
+    got = d.contract(SPEC, A, B)  # miss → analytic fallback, no measuring
+    assert d.measurements == 0 and d.misses == 1
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.einsum(SPEC, A, B)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_tuned_under_jit_falls_back_without_measuring():
+    A, B = _operands()
+    d = _disp(None)
+    set_dispatcher(d)
+    f = jax.jit(lambda a, b: contract(SPEC, a, b, strategy="tuned"))
+    got = f(A, B)
+    assert d.measurements == 0  # tracers cannot be timed
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.einsum(SPEC, A, B)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_canonical_key_mode_renaming():
+    k1 = canonical_key("mk,pkn->pmn", DIMS, jnp.float32, "cpu")
+    dims2 = {"a": 12, "b": 16, "c": 4, "d": 8}
+    k2 = canonical_key("ab,cbd->cad", dims2, jnp.float32, "cpu")
+    assert k1 == k2
+    assert canonical_key("mk,pkn->pmn", DIMS, jnp.bfloat16, "cpu") != k1
+
+
+def test_record_contractions_nested_removal_by_identity():
+    A, B = _operands()
+    with record_contractions() as outer:
+        with record_contractions() as inner:
+            pass  # both empty → equal lists; exit must remove by identity
+        contract(SPEC, A, B)
+    assert len(outer) == 1 and inner == []
+
+
+def test_pretune_from_recorded_working_set(tmp_path):
+    A, B = _operands()
+    with record_contractions() as rec:
+        jax.eval_shape(lambda a, b: contract(SPEC, a, b), A, B)
+    assert rec and rec[0][0] == SPEC
+    d = _disp(tmp_path / "t.json")
+    stats = d.pretune(rec)
+    assert stats["unique"] == 1 and stats["tuned"] == 1
+    assert d.pretune(rec)["cached"] == 1  # idempotent
+
+
+# -------------------------------------------------------------------- einsum
+def test_xeinsum_optimize_tuned_matches_reference():
+    rng = np.random.default_rng(0)
+    T = jnp.asarray(rng.standard_normal((6, 8, 10)), jnp.float32)
+    W = jnp.asarray(rng.standard_normal((10, 4)), jnp.float32)
+    U = jnp.asarray(rng.standard_normal((6, 5)), jnp.float32)
+    ref = jnp.einsum("mnk,kr,ms->nrs", T, W, U)
+
+    set_dispatcher(_disp(None))
+    # cold cache: analytic fallback ranking
+    out = xeinsum("mnk,kr,ms->nrs", T, W, U, optimize="tuned")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # warm the per-step entries, then re-rank from measurements
+    xeinsum("mnk,kr,ms->nrs", T, W, U, strategy="tuned")
+    out = xeinsum("mnk,kr,ms->nrs", T, W, U, optimize="tuned")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    path = contraction_path("mnk,kr,ms->nrs", T, W, U, optimize="tuned")
+    assert path.optimize == "tuned" and len(path.steps) == 2
+
+
+def test_optimal_error_suggests_auto_and_greedy():
+    shapes = [(2, 2)] * 12
+    spec = ",".join(["ab", "bc", "cd", "de", "ef", "fg", "gh", "hi", "ij",
+                     "jk", "kl", "lm"]) + "->am"
+    with pytest.raises(ValueError) as ei:
+        contraction_path(spec, *shapes, optimize="optimal")
+    assert "greedy" in str(ei.value) and "auto" in str(ei.value)
+    assert "REPRO_OPTIMAL_MAX_OPERANDS" in str(ei.value)
+
+
+def test_optimal_cap_env_override(monkeypatch):
+    shapes = [(2, 2)] * 3
+    monkeypatch.setenv("REPRO_OPTIMAL_MAX_OPERANDS", "2")
+    with pytest.raises(ValueError, match="≤ 2"):
+        contraction_path("ab,bc,cd->ad", *shapes, optimize="optimal")
+    monkeypatch.setenv("REPRO_OPTIMAL_MAX_OPERANDS", "4")
+    path = contraction_path("ab,bc,cd->ad", *shapes, optimize="optimal")
+    assert len(path.steps) == 2
+
+
+# ------------------------------------------------------------------- serving
+def test_serve_engine_pretune(tmp_path):
+    from repro.configs import get_config
+    from repro.models.transformer import Model
+    from repro.serving.engine import ServeEngine
+
+    cfg = get_config("minicpm-2b", smoke=True).with_(n_periods=1)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    path = tmp_path / "t.json"
+
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, pretune=True,
+                      tuner=_disp(path))
+    assert eng.pretune_stats["unique"] > 0
+    assert eng.pretune_stats["tuned"] == eng.pretune_stats["unique"]
+
+    # same cache → warm start: zero new measurements
+    tuner2 = _disp(path)
+    eng2 = ServeEngine(cfg, params, slots=2, max_len=64, pretune=True,
+                      tuner=tuner2)
+    assert eng2.pretune_stats["cached"] == eng2.pretune_stats["unique"]
+    assert tuner2.measurements == 0

@@ -27,6 +27,7 @@ MODULES = [
     "fig9_tucker",
     "fig10_nary_path",
     "fig11_autotune",
+    "fig12_sharded",
     "table2_cases",
 ]
 

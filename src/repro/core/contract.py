@@ -111,6 +111,9 @@ def contract(
     tiles: dict | None = None,
     preferred_element_type=jnp.float32,
     out_dtype=None,
+    mesh=None,
+    in_specs=None,
+    out_spec=None,
 ):
     """Evaluate one pairwise contraction ``C = A · B``.
 
@@ -141,6 +144,14 @@ def contract(
         strategy (``"auto"``/``"flatten"``/``"batched"``).
       preferred_element_type: accumulator dtype passed to ``dot_general``.
       out_dtype: result dtype; defaults to the promoted operand dtype.
+      mesh: a ``jax.sharding.Mesh`` — execute *sharded*: every device
+        runs this contraction's plan on its local block under
+        ``shard_map``, with collectives only where the contracted mode is
+        sharded (see :mod:`repro.distributed.contract`).
+      in_specs: with ``mesh``, a pair of ``PartitionSpec`` (or ``None``)
+        aligned to the operand mode strings.
+      out_spec: with ``mesh``, the requested output sharding (default:
+        the natural one — batch/free modes keep their input sharding).
 
     Returns:
       The contracted array with modes ordered as ``spec``'s output.
@@ -153,6 +164,17 @@ def contract(
         rec_dtype = str(jnp.result_type(A.dtype, B.dtype))
         for rec in _ACTIVE_RECORDERS:
             rec.append((cs.spec_str(), dict(dims), rec_dtype))
+
+    if mesh is not None:
+        from repro.distributed.contract import sharded_contract  # no cycle
+
+        return sharded_contract(
+            cs, A, B, mesh=mesh, in_specs=in_specs, out_spec=out_spec,
+            strategy=strategy, backend=backend, tiles=tiles,
+            preferred_element_type=preferred_element_type, out_dtype=out_dtype,
+        )
+    if in_specs is not None or out_spec is not None:
+        raise ValueError("in_specs/out_spec require mesh=")
 
     if strategy == "tuned":
         if tiles is not None:
@@ -300,10 +322,15 @@ def _direct(cs: ContractionSpec, A, B, prefer):
 
 def _conventional(cs: ContractionSpec, A, B, dims: dict, prefer):
     """Explicit-copy matricization: permute to ``C_IJ = A_IK B_KJ``, flat
-    GEMM, permute back.  Returns (result, n_materialized_transposes)."""
+    GEMM, permute back.  Shared batch modes (in A, B *and* C — absent
+    from the paper's Table II regime but legal specs) ride along as a
+    leading batch group ``T`` on both matricized operands: per batch
+    entry the evaluation is still the textbook permute–GEMM–permute.
+    Returns (result, n_materialized_transposes)."""
     k = cs.contracted
-    I = "".join(m for m in cs.c_modes if m in cs.a_modes)
-    J = "".join(m for m in cs.c_modes if m in cs.b_modes)
+    T = "".join(m for m in cs.c_modes if m in cs.batch)
+    I = "".join(m for m in cs.c_modes if m in cs.a_modes and m not in T)
+    J = "".join(m for m in cs.c_modes if m in cs.b_modes and m not in T)
     n_trans = 0
 
     def permute(x, modes: str, target: str):
@@ -315,15 +342,15 @@ def _conventional(cs: ContractionSpec, A, B, dims: dict, prefer):
         # materialize the copy — this is the cost the baseline pays
         return lax.optimization_barrier(jnp.transpose(x, perm))
 
-    a2 = permute(A, cs.a_modes, I + k).reshape(
-        _prod(dims, I), _prod(dims, k)
+    a2 = permute(A, cs.a_modes, T + I + k).reshape(
+        _prod(dims, T), _prod(dims, I), _prod(dims, k)
     )
-    b2 = permute(B, cs.b_modes, k + J).reshape(
-        _prod(dims, k), _prod(dims, J)
+    b2 = permute(B, cs.b_modes, T + k + J).reshape(
+        _prod(dims, T), _prod(dims, k), _prod(dims, J)
     )
     c2 = jnp.matmul(a2, b2, preferred_element_type=prefer)
-    c = c2.reshape(tuple(dims[m] for m in I + J))
-    out = permute(c, I + J, cs.c_modes)
+    c = c2.reshape(tuple(dims[m] for m in T + I + J))
+    out = permute(c, T + I + J, cs.c_modes)
     return out, n_trans
 
 
@@ -344,12 +371,13 @@ def conventional_transpose_count(spec: str | ContractionSpec) -> int:
     """
     cs = parse_spec(spec) if isinstance(spec, str) else spec
     k = cs.contracted
-    I = "".join(m for m in cs.c_modes if m in cs.a_modes)
-    J = "".join(m for m in cs.c_modes if m in cs.b_modes)
+    T = "".join(m for m in cs.c_modes if m in cs.batch)
+    I = "".join(m for m in cs.c_modes if m in cs.a_modes and m not in T)
+    J = "".join(m for m in cs.c_modes if m in cs.b_modes and m not in T)
     n = 0
-    n += cs.a_modes != I + k
-    n += cs.b_modes != k + J
-    n += cs.c_modes != I + J
+    n += cs.a_modes != T + I + k
+    n += cs.b_modes != T + k + J
+    n += cs.c_modes != T + I + J
     return int(n)
 
 

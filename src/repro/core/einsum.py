@@ -58,11 +58,18 @@ import dataclasses
 import os
 from typing import Literal
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.contract import Backend, Strategy, contract, infer_dims
 from repro.core.notation import _VALID_MODES, CaseKind, ContractionSpec
-from repro.core.planner import contraction_flops, make_plan, modes_size
+from repro.core.planner import (
+    COMM_FLOPS_PER_BYTE,
+    contraction_flops,
+    make_plan,
+    modes_size,
+    sharded_step_cost,
+)
 
 __all__ = [
     "OPTIMAL_MAX_OPERANDS",
@@ -165,9 +172,12 @@ class PathStep:
     rhs: int
     out: int
     spec: ContractionSpec          # pairwise spec lowered through make_plan
-    flops: int                     # cost-model flops of this step
+    flops: int                     # optimizer objective: cost-model flops
+                                   # (plus the flop-equivalent communication
+                                   # term when planned against a mesh)
     size: int                      # element count of this step's result
     kind: str = ""                 # planner classification (CaseKind.*)
+    comm_bytes: int = 0            # estimated collective bytes/device (mesh)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,6 +194,11 @@ class ContractionPath:
     @property
     def total_flops(self) -> int:
         return sum(s.flops for s in self.steps)
+
+    @property
+    def total_comm_bytes(self) -> int:
+        """Estimated collective bytes/device (0 for single-device paths)."""
+        return sum(s.comm_bytes for s in self.steps)
 
     @property
     def largest_intermediate(self) -> int:
@@ -240,13 +255,32 @@ def _classify(cs: ContractionSpec, dims: dict) -> tuple[str, int]:
     return plan.kind, penalty
 
 
-def _make_step(ids, modes, ia, ib, res, dims, next_id) -> PathStep:
+def _step_cost(cs: ContractionSpec, dims: dict, shard) -> tuple[int, int]:
+    """(optimizer objective, comm bytes) for one pairwise step.
+
+    ``shard`` is ``None`` (single-device — the objective is exactly
+    :func:`contraction_flops`) or ``(mode_axes, axis_sizes)`` from a mesh:
+    then flops are per-shard and collective bytes fold in at
+    :data:`~repro.core.planner.COMM_FLOPS_PER_BYTE` flop-equivalents, so
+    path optimization ranks sharded paths by modeled wall-clock, not by
+    single-device flops (a path that keeps contracted modes unsharded can
+    beat a nominally cheaper one that all-reduces every step).
+    """
+    if shard is None:
+        return contraction_flops(cs, dims), 0
+    mode_axes, axis_sizes = shard
+    flops_local, comm = sharded_step_cost(cs, dims, mode_axes, axis_sizes)
+    return flops_local + int(COMM_FLOPS_PER_BYTE * comm), comm
+
+
+def _make_step(ids, modes, ia, ib, res, dims, next_id, shard=None) -> PathStep:
     cs = ContractionSpec(modes[ia], modes[ib], res)
     kind, _ = _classify(cs, dims)
+    cost, comm = _step_cost(cs, dims, shard)
     return PathStep(
         lhs=ids[ia], rhs=ids[ib], out=next_id, spec=cs,
-        flops=contraction_flops(cs, dims), size=modes_size(res, dims),
-        kind=kind,
+        flops=cost, size=modes_size(res, dims),
+        kind=kind, comm_bytes=comm,
     )
 
 
@@ -262,7 +296,7 @@ def _keep_for(modes: list[str], output: str, skip: tuple[int, int]) -> set:
     return keep
 
 
-def _naive_path(inputs, output, dims) -> tuple[PathStep, ...]:
+def _naive_path(inputs, output, dims, shard=None) -> tuple[PathStep, ...]:
     """Left-to-right fold — the hand-written pairwise baseline."""
     ids = list(range(len(inputs)))
     modes = list(inputs)
@@ -271,13 +305,13 @@ def _naive_path(inputs, output, dims) -> tuple[PathStep, ...]:
     while len(modes) > 1:
         keep = _keep_for(modes, output, (0, 1))
         res = output if len(modes) == 2 else _pair_modes(modes[0], modes[1], keep)
-        steps.append(_make_step(ids, modes, 0, 1, res, dims, next_id))
+        steps.append(_make_step(ids, modes, 0, 1, res, dims, next_id, shard))
         ids[:2], modes[:2] = [next_id], [res]
         next_id += 1
     return tuple(steps)
 
 
-def _greedy_path(inputs, output, dims) -> tuple[PathStep, ...]:
+def _greedy_path(inputs, output, dims, shard=None) -> tuple[PathStep, ...]:
     """Smallest-intermediate-first (ties: fewest flops, then operand order).
 
     Pairs sharing at least one mode are preferred over outer products."""
@@ -295,14 +329,14 @@ def _greedy_path(inputs, output, dims) -> tuple[PathStep, ...]:
                 key = (
                     not (set(modes[i]) & set(modes[j])),
                     modes_size(res, dims),
-                    contraction_flops(cs, dims),
+                    _step_cost(cs, dims, shard)[0],
                     _classify(cs, dims)[1],
                     i, j,
                 )
                 if best is None or key < best[0]:
                     best = (key, i, j, res)
         _, i, j, res = best
-        steps.append(_make_step(ids, modes, i, j, res, dims, next_id))
+        steps.append(_make_step(ids, modes, i, j, res, dims, next_id, shard))
         for idx in (j, i):  # j first: preserve i's position
             del ids[idx], modes[idx]
         ids.append(next_id)
@@ -311,15 +345,17 @@ def _greedy_path(inputs, output, dims) -> tuple[PathStep, ...]:
     return tuple(steps)
 
 
-def _optimal_path(inputs, output, dims) -> tuple[PathStep, ...]:
+def _optimal_path(inputs, output, dims, shard=None) -> tuple[PathStep, ...]:
     """Exact subset dynamic program (Held–Karp over operand bitmasks).
 
     ``best[mask]`` holds the cheapest way to contract the operand subset
     ``mask`` down to one tensor.  A subset's result modes are path-
     independent — a mode survives iff it appears outside the subset or in
-    the output — so the DP is well-formed.  Minimises total flops, with
-    the summed layout penalty (flatten ≺ sb_gemm ≺ nested ≺ exceptional)
-    and the largest intermediate as tie-breaks.
+    the output — so the DP is well-formed.  Minimises total flops (plus
+    the communication term under a mesh, which is also subset-local: the
+    global mode→axis map makes every step's sharding path-independent),
+    with the summed layout penalty (flatten ≺ sb_gemm ≺ nested ≺
+    exceptional) and the largest intermediate as tie-breaks.
     """
     n = len(inputs)
     cap = _optimal_cap()
@@ -359,7 +395,7 @@ def _optimal_path(inputs, output, dims) -> tuple[PathStep, ...]:
                         ml, mr, outside_keep[mask]
                     )
                     cs = ContractionSpec(ml, mr, res)
-                    tot = fl_l + fl_r + contraction_flops(cs, dims)
+                    tot = fl_l + fl_r + _step_cost(cs, dims, shard)[0]
                     pen = pn_l + pn_r + _classify(cs, dims)[1]
                     peak = max(pk_l, pk_r, modes_size(res, dims))
                     if choice is None or (tot, pen, peak) < choice[:3]:
@@ -376,10 +412,11 @@ def _optimal_path(inputs, output, dims) -> tuple[PathStep, ...]:
         _, _, _, res, (lmask, rmask) = best[mask]
         la, lb = emit(lmask), emit(rmask)
         cs = ContractionSpec(best[lmask][3], best[rmask][3], res)
+        cost, comm = _step_cost(cs, dims, shard)
         step = PathStep(
             lhs=la, rhs=lb, out=counter[0], spec=cs,
-            flops=contraction_flops(cs, dims), size=modes_size(res, dims),
-            kind=_classify(cs, dims)[0],
+            flops=cost, size=modes_size(res, dims),
+            kind=_classify(cs, dims)[0], comm_bytes=comm,
         )
         counter[0] += 1
         steps.append(step)
@@ -425,27 +462,73 @@ def _tuned_path(spec, inputs, output, dims, dtype) -> ContractionPath:
     return dataclasses.replace(chosen, optimize="tuned")
 
 
-def _plan_path(spec, inputs, output, dims, optimize, *, dtype=None) -> ContractionPath:
+def _plan_path(
+    spec, inputs, output, dims, optimize, *, dtype=None, shard=None
+) -> ContractionPath:
     if len(inputs) < 2:
         return ContractionPath(spec, inputs, output, dims, (), str(optimize))
     if optimize not in ("auto", "greedy", "optimal", "naive", "tuned"):
         raise ValueError(f"unknown optimize mode {optimize!r}")
     if optimize == "tuned":
+        if shard is not None:
+            raise ValueError(
+                "optimize='tuned' re-ranks with single-device measurements; "
+                "use 'auto'/'greedy'/'optimal'/'naive' with mesh="
+            )
         return _tuned_path(spec, inputs, output, dims, dtype or jnp.float32)
     method = optimize
     if optimize == "auto":
         method = "optimal" if len(inputs) <= AUTO_OPTIMAL_LIMIT else "greedy"
     if method == "naive" or len(inputs) == 2:
-        steps = _naive_path(inputs, output, dims)
+        steps = _naive_path(inputs, output, dims, shard)
     elif method == "greedy":
-        steps = _greedy_path(inputs, output, dims)
+        steps = _greedy_path(inputs, output, dims, shard)
     else:
-        steps = _optimal_path(inputs, output, dims)
+        steps = _optimal_path(inputs, output, dims, shard)
     return ContractionPath(spec, inputs, output, dims, steps, method)
 
 
+def _shard_ctx(inputs, in_specs, mesh):
+    """(global mode→axis map, axis sizes) for comm-aware path costing."""
+    from repro.distributed.contract import resolve_mode_axes  # no cycle
+
+    mode_axes = resolve_mode_axes(inputs, in_specs, mesh=mesh)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return mode_axes, axis_sizes
+
+
+def _drop_reduced_pspecs(in_specs, inputs_before, reduce_axes):
+    """Align per-operand PartitionSpecs past the sum-only reduction.
+
+    A sharded sum-only mode would need a post-sum psum; rather than model
+    that corner we reject it — shard modes that participate in the
+    contraction.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if in_specs is None:
+        return None
+    if len(in_specs) != len(inputs_before):
+        raise ValueError(
+            f"spec has {len(inputs_before)} operands, got {len(in_specs)} "
+            f"in_specs"
+        )
+    out = []
+    for pspec, modes, axes in zip(in_specs, inputs_before, reduce_axes):
+        entries = list(tuple(pspec) if pspec is not None else ())
+        entries += [None] * (len(modes) - len(entries))
+        for i in axes:
+            if entries[i] is not None:
+                raise NotImplementedError(
+                    f"mode {modes[i]!r} is summed out before planning but "
+                    f"sharded over {entries[i]!r}; replicate sum-only modes"
+                )
+        out.append(P(*[e for i, e in enumerate(entries) if i not in axes]))
+    return tuple(out)
+
+
 def contraction_path(
-    spec: str, *operands, optimize: Optimize = "auto"
+    spec: str, *operands, optimize: Optimize = "auto", mesh=None, in_specs=None
 ) -> ContractionPath:
     """Plan (without executing) the pairwise-contraction path for ``spec``.
 
@@ -453,12 +536,21 @@ def contraction_path(
     (plus dtypes, when present, for ``optimize="tuned"`` cache lookups).
     Modes appearing in a single operand and not in the output are summed
     out up front and do not appear in the returned path's steps.
+
+    With ``mesh`` and per-operand ``in_specs`` the path is costed
+    shard-aware: per-step flops divide across the shards and a
+    communication term (collective bytes × flop-equivalents) is added
+    where a sharded contracted mode forces an all-reduce — so the
+    optimizer ranks sharded paths by modeled wall-clock.
     """
+    if mesh is None and in_specs is not None:
+        raise ValueError("in_specs requires mesh=")
     inputs, output = parse_nary(spec)
     shapes = [getattr(op, "shape", op) for op in operands]
     if len(shapes) != len(inputs):
         raise ValueError(f"spec has {len(inputs)} operands, got {len(shapes)}")
     reduce_axes = _sum_only_axes(inputs, output)
+    in_specs = _drop_reduced_pspecs(in_specs, inputs, reduce_axes)
     inputs = tuple(
         "".join(m for i, m in enumerate(t) if i not in axes)
         for t, axes in zip(inputs, reduce_axes)
@@ -470,7 +562,8 @@ def contraction_path(
     dims = _infer_dims(inputs, shapes)
     dts = [op.dtype for op in operands if hasattr(op, "dtype")]
     dtype = jnp.result_type(*dts) if dts else jnp.float32
-    return _plan_path(spec, inputs, output, dims, optimize, dtype=dtype)
+    shard = _shard_ctx(inputs, in_specs, mesh) if mesh is not None else None
+    return _plan_path(spec, inputs, output, dims, optimize, dtype=dtype, shard=shard)
 
 
 # --------------------------------------------------------------------------
@@ -495,6 +588,16 @@ def _pairwise(cs: ContractionSpec, a, b, strategy, backend, prefer, tiles=None):
     ``tiles`` overrides are forwarded only to steps that reach a planning
     strategy on the Pallas backend (``contract`` rejects them elsewhere).
     """
+    eff, step_tiles = _soften_step(cs, a, b, strategy, backend, tiles)
+    return contract(
+        cs, a, b, strategy=eff, backend=backend, tiles=step_tiles,
+        preferred_element_type=prefer,
+    )
+
+
+def _soften_step(cs, a, b, strategy, backend, tiles):
+    """(effective strategy, effective tiles) for one path step — shared by
+    the single-device and sharded lowerings so they can never diverge."""
     eff = strategy
     if not cs.c_modes or a.ndim == 0 or b.ndim == 0:
         eff = "direct"
@@ -504,9 +607,25 @@ def _pairwise(cs: ContractionSpec, a, b, strategy, backend, prefer, tiles=None):
     step_tiles = tiles
     if eff not in ("auto", "flatten", "batched") or backend != "pallas":
         step_tiles = None
-    return contract(
-        cs, a, b, strategy=eff, backend=backend, tiles=step_tiles,
-        preferred_element_type=prefer,
+    return eff, step_tiles
+
+
+def _pairwise_sharded(
+    cs: ContractionSpec, a, b, a_pspec, b_pspec, step_out_spec,
+    strategy, backend, prefer, tiles, mesh,
+):
+    """Sharded mirror of :func:`_pairwise` — one path step over the mesh.
+
+    Returns ``(result, ShardedPlan)``; the plan's ``out_spec`` becomes the
+    next step's operand PartitionSpec (natural sharding propagation).
+    """
+    from repro.distributed.contract import sharded_contract  # no cycle
+
+    eff, step_tiles = _soften_step(cs, a, b, strategy, backend, tiles)
+    return sharded_contract(
+        cs, a, b, mesh=mesh, in_specs=(a_pspec, b_pspec),
+        out_spec=step_out_spec, strategy=eff, backend=backend,
+        tiles=step_tiles, preferred_element_type=prefer, return_plan=True,
     )
 
 
@@ -519,6 +638,9 @@ def xeinsum(
     tiles: dict | None = None,
     preferred_element_type=jnp.float32,
     out_dtype=None,
+    mesh=None,
+    in_specs=None,
+    out_spec=None,
 ):
     """N-ary einsum through the paper's contraction engine.
 
@@ -543,6 +665,16 @@ def xeinsum(
       tiles: per-call Pallas tile overrides forwarded to every planning
         step on the Pallas backend (see :func:`contract`).
       out_dtype: result dtype (default: promoted operand dtype).
+      mesh: a ``jax.sharding.Mesh`` — execute every path step sharded
+        (:mod:`repro.distributed.contract`): path optimization gains the
+        communication cost term, each pairwise step runs the local
+        kernels per shard under ``shard_map``, and intermediate shardings
+        propagate naturally (collectives only where a sharded contracted
+        mode forces a reduction).
+      in_specs: with ``mesh``, one ``PartitionSpec`` (or ``None``) per
+        operand, aligned to its spec modes.
+      out_spec: with ``mesh``, the requested output sharding (default
+        natural).
 
     Returns:
       The contracted array, with modes ordered as the spec's output.
@@ -553,6 +685,13 @@ def xeinsum(
     out_dtype = out_dtype or jnp.result_type(*arrays)
     if strategy == "pallas":
         strategy, backend = "auto", "pallas"
+    if mesh is None and (in_specs is not None or out_spec is not None):
+        raise ValueError("in_specs/out_spec require mesh=")
+    if mesh is not None and strategy == "tuned":
+        raise ValueError(
+            "strategy='tuned' is single-device (the cache holds per-device "
+            "measurements); pick an analytic strategy for sharded execution"
+        )
     if tiles is not None:
         # mirror contract()'s rules eagerly — a tiles= override that no
         # step could honor must error, not silently evaporate
@@ -571,6 +710,8 @@ def xeinsum(
     if len(arrays) != len(inputs):
         raise ValueError(f"spec has {len(inputs)} operands, got {len(arrays)}")
     reduce_axes = _sum_only_axes(inputs, output)
+    if mesh is not None:
+        in_specs = _drop_reduced_pspecs(in_specs, inputs, reduce_axes)
     arrays = [
         jnp.sum(x, axis=axes) if axes else x
         for x, axes in zip(arrays, reduce_axes)
@@ -582,7 +723,12 @@ def xeinsum(
     dims = _infer_dims(inputs, [x.shape for x in arrays])
 
     if len(arrays) == 1:
-        return _single_operand(inputs[0], output, arrays[0]).astype(out_dtype)
+        result = _single_operand(inputs[0], output, arrays[0]).astype(out_dtype)
+        if mesh is not None and out_spec is not None:
+            from jax.sharding import NamedSharding
+
+            result = jax.device_put(result, NamedSharding(mesh, out_spec))
+        return result
 
     if isinstance(optimize, ContractionPath):
         path = optimize
@@ -592,12 +738,33 @@ def xeinsum(
                 f"not {inputs}->{output}"
             )
     else:
+        shard = _shard_ctx(inputs, in_specs, mesh) if mesh is not None else None
         path = _plan_path(
             spec, inputs, output, dims, optimize,
-            dtype=jnp.result_type(*arrays),
+            dtype=jnp.result_type(*arrays), shard=shard,
         )
 
     env = dict(enumerate(arrays))
+    if mesh is not None:
+        # sharded lowering: thread each intermediate's PartitionSpec into
+        # the next step (natural propagation; the final step applies the
+        # caller's out_spec)
+        penv = dict(enumerate(
+            in_specs if in_specs is not None else (None,) * len(arrays)
+        ))
+        for n, step in enumerate(path.steps):
+            a, b = env.pop(step.lhs), env.pop(step.rhs)
+            pa, pb = penv.pop(step.lhs), penv.pop(step.rhs)
+            last = n == len(path.steps) - 1
+            res, splan = _pairwise_sharded(
+                step.spec, a, b, pa, pb, out_spec if last else None,
+                strategy, backend, preferred_element_type, tiles, mesh,
+            )
+            env[step.out] = res
+            penv[step.out] = splan.out_spec
+        (result,) = env.values()
+        return result.astype(out_dtype)
+
     for step in path.steps:
         a, b = env.pop(step.lhs), env.pop(step.rhs)
         env[step.out] = _pairwise(

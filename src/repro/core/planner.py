@@ -26,7 +26,14 @@ from repro.core.notation import (
     parse_spec,
 )
 
-__all__ = ["Plan", "make_plan", "modes_size", "contraction_flops"]
+__all__ = [
+    "Plan",
+    "make_plan",
+    "modes_size",
+    "contraction_flops",
+    "sharded_step_cost",
+    "COMM_FLOPS_PER_BYTE",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +95,72 @@ def contraction_flops(spec: str | ContractionSpec, dims: dict) -> int:
     return 2 * modes_size("".join(dict.fromkeys(cs.a_modes + cs.b_modes)), dims)
 
 
+#: flop-equivalents per byte crossing the interconnect, used to fold the
+#: communication term into the path optimizer's flop objective.  Peise et
+#: al. (arXiv:1409.8608) compose per-kernel models into whole-contraction
+#: predictions; a mesh adds one more kernel class — the collective — whose
+#: cost is bandwidth-bound.  ~100 GFLOP/s of per-device compute against
+#: ~3 GB/s of host-simulated (or PCIe-class) interconnect gives O(30)
+#: flops per byte; the exact constant only needs to be large enough that
+#: a path moving gigabytes never beats one moving kilobytes.
+COMM_FLOPS_PER_BYTE = 32.0
+
+
+def sharded_step_cost(
+    spec: str | ContractionSpec,
+    dims: dict,
+    mode_axes: dict,
+    axis_sizes: dict,
+    *,
+    dtype_bytes: int = 4,
+) -> tuple[int, int]:
+    """(local flops, communication bytes per device) for one sharded step.
+
+    ``mode_axes`` maps a mode to the mesh axis name (or tuple of names)
+    that shards it; modes absent from the map are replicated.  The model:
+
+    * every device computes its block → flops divide by the product of
+      the axis sizes sharding any mode of the step;
+    * a *sharded contracted mode* leaves each device with a partial
+      result that must be all-reduced (or reduce-scattered) over the
+      contracted axes: a ring moves ``2·(R-1)/R × local_bytes`` per
+      device — ``≈ local_bytes × R`` relative to the post-reduction
+      shard, which is the "bytes moved × mesh axis size" term;
+    * batch/free sharded modes move nothing.
+
+    The total path objective is ``local_flops + COMM_FLOPS_PER_BYTE ×
+    comm_bytes``; with no sharded modes this degrades exactly to
+    :func:`contraction_flops`.
+    """
+    cs = parse_spec(spec) if isinstance(spec, str) else spec
+
+    def group(mode: str) -> tuple[str, ...]:
+        g = mode_axes.get(mode)
+        if g is None:
+            return ()
+        return (g,) if isinstance(g, str) else tuple(g)
+
+    def shard_factor(modes) -> int:
+        f = 1
+        for m in dict.fromkeys(modes):
+            for ax in group(m):
+                f *= int(axis_sizes[ax])
+        return f
+
+    every = "".join(dict.fromkeys(cs.a_modes + cs.b_modes))
+    flops_local = contraction_flops(cs, dims) // max(shard_factor(every), 1)
+
+    reduce_f = shard_factor(cs.contracted)
+    comm = 0
+    if reduce_f > 1:
+        out_local = modes_size(cs.c_modes, dims) // max(
+            shard_factor(cs.c_modes), 1
+        )
+        # ring all-reduce of each device's partial block of C
+        comm = 2 * (reduce_f - 1) * out_local * dtype_bytes
+    return flops_local, comm
+
+
 def _apply_flattening(spec: ContractionSpec, groups: list[str], dims: dict):
     """Rename each flattened group to its leading mode, fusing dims."""
     fdims = dict(dims)
@@ -130,11 +203,21 @@ def make_plan(
     *,
     allow_flatten: bool = True,
     force_batch: str | None = None,
+    mesh=None,
+    in_specs=None,
 ) -> Plan:
     """Plan a pairwise contraction.  ``dims`` maps every mode to its size.
 
     ``force_batch`` pins the sb_gemm batch mode (used by the Fig. 5/6
     benchmarks that compare batching the last vs. the middle output mode).
+
+    With ``mesh`` (a ``jax.sharding.Mesh``) and ``in_specs`` (one
+    ``PartitionSpec`` per operand) the plan describes what each *shard*
+    executes under :func:`repro.distributed.contract.sharded_contract`:
+    dims of sharded modes are divided by their mesh-axis sizes (validated
+    divisible), and the plan's notes record the collectives the sharded
+    lowering will insert.  The local plan's kind may legitimately differ
+    from the global one — classification depends on sizes.
     """
     cs = parse_spec(spec) if isinstance(spec, str) else spec
     cs.validate()
@@ -142,6 +225,35 @@ def make_plan(
     if missing:
         raise ValueError(f"dims missing for modes {sorted(missing)}")
 
+    shard_note = ""
+    if mesh is not None:
+        # deferred import: distributed builds on core, not the reverse
+        from repro.distributed.contract import resolve_mode_axes, local_dims
+
+        mode_axes = resolve_mode_axes(
+            (cs.a_modes, cs.b_modes), in_specs, mesh=mesh
+        )
+        dims = local_dims(dims, mode_axes, mesh)
+        reduced = [m for m in cs.contracted if m in mode_axes]
+        body = ",".join(f"{m}:{mode_axes[m]}" for m in sorted(mode_axes))
+        shard_note = f"sharded[{body or 'replicated'}]" + (
+            f" psum over {reduced}" if reduced else ""
+        )
+
+    plan = _plan_local(cs, dims, allow_flatten=allow_flatten, force_batch=force_batch)
+    if shard_note:
+        notes = f"{plan.notes}; {shard_note}" if plan.notes else shard_note
+        plan = dataclasses.replace(plan, notes=notes)
+    return plan
+
+
+def _plan_local(
+    cs: ContractionSpec,
+    dims: dict,
+    *,
+    allow_flatten: bool,
+    force_batch: str | None,
+) -> Plan:
     groups = flattenable_groups(cs) if allow_flatten else []
     fspec, fdims = _apply_flattening(cs, groups, dims)
 
@@ -164,8 +276,13 @@ def make_plan(
 
     shared = set(fspec.batch)  # modes in A, B and C — always batch modes
     if v in shared:
-        # C's minor axis is a shared batch mode: no matrix view of C exists.
-        return _exceptional_plan(cs, fspec, groups, dims, fdims, reason="minor output mode is shared batch")
+        # C's minor axis is a shared batch mode: no matrix view of C
+        # exists, whatever the other modes do — always the degenerate
+        # (direct dot_general) route
+        return _exceptional_plan(
+            cs, fspec, groups, dims, fdims,
+            reason="minor output mode is shared batch", degenerate=True,
+        )
 
     v_in_a = v in fspec.a_modes
     owner_modes = fspec.a_modes if v_in_a else fspec.b_modes
@@ -222,7 +339,9 @@ def make_plan(
     )
 
 
-def _exceptional_plan(cs, fspec, groups, dims, fdims, *, reason: str) -> Plan:
+def _exceptional_plan(
+    cs, fspec, groups, dims, fdims, *, reason: str, degenerate: bool = False
+) -> Plan:
     """Exceptional case: batching is forced into an operand's stride-1 mode.
 
     Mirror of paper §III-E.  The output's minor-most mode ``v`` stays a GEMM
@@ -231,13 +350,19 @@ def _exceptional_plan(cs, fspec, groups, dims, fdims, *, reason: str) -> Plan:
     operand's per-batch view strided in both matrix dims.  The extended
     kernel resolves this with a 3D VMEM brick of the offending operand
     (the paper's "3D tiling of B into cache").
+
+    ``degenerate=True`` forces the no-matrix-view route regardless of β —
+    used when C's minor mode is a shared batch mode, where no GEMM-mode
+    assignment is coherent (found by the differential fuzzer: an
+    in-output β used to slip past the β-based degeneracy test and build
+    a nested plan that never batches the shared mode).
     """
     v = fspec.c_modes[-1]
     kgroup = fspec.contracted
     owner_modes = fspec.a_modes if v in fspec.a_modes else fspec.b_modes
     other_modes = fspec.b_modes if v in fspec.a_modes else fspec.a_modes
     beta = owner_modes[-1]  # the stride-1 mode that must carry the batch
-    if beta not in fspec.c_modes or beta == v:
+    if degenerate or beta not in fspec.c_modes or beta == v:
         # Doubly-degenerate layout (e.g. C's minor mode is a shared batch
         # mode).  The XLA executor still evaluates it; Pallas falls back.
         u = next((m for m in fspec.c_modes[:-1]), "")
@@ -249,10 +374,13 @@ def _exceptional_plan(cs, fspec, groups, dims, fdims, *, reason: str) -> Plan:
             notes=f"exceptional(degenerate): {reason}",
         )
     # u: a free GEMM mode from the other operand (must keep that operand's
-    # view a legal matrix), preferring the largest dimension.
+    # view a legal matrix), preferring the largest dimension.  Shared batch
+    # modes are not candidates — they appear in *both* operands, so using
+    # one as a GEMM mode leaves it unbatched on the owner side (the
+    # differential fuzzer caught exactly that); they nest as vmaps below.
     u_cands = []
     for m in other_modes:
-        if m in set(fspec.c_modes) and m not in {v, beta}:
+        if m in set(fspec.c_modes) and m not in {v, beta} and m not in fspec.batch:
             ok, _ = _view_is_matrix(other_modes, set(kgroup) | {m})
             if ok:
                 u_cands.append(m)

@@ -10,7 +10,25 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "parse_mesh_shape"]
+
+
+def parse_mesh_shape(arg: str) -> tuple[int, int]:
+    """Parse a ``--mesh DATAxMODEL`` CLI argument, e.g. ``"2x4"`` → (2, 4).
+
+    Simulate the devices on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set *before*
+    the first jax import — the host device count locks at first init).
+    """
+    try:
+        data, model = (int(p) for p in arg.lower().split("x"))
+    except ValueError as e:
+        raise ValueError(
+            f"--mesh wants DATAxMODEL (e.g. '2x4'), got {arg!r}"
+        ) from e
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh sizes must be positive, got {arg!r}")
+    return data, model
 
 
 def make_production_mesh(*, multi_pod: bool = False):

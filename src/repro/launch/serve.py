@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --smoke \
         --requests 8 --max-new 16
+
+Sharded serving over a device mesh (simulate the devices on CPU by
+exporting ``XLA_FLAGS=--xla_force_host_platform_device_count=8``):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --smoke \
+        --mesh 2x4 --requests 8 --max-new 16
 """
 
 from __future__ import annotations
@@ -13,6 +20,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh, parse_mesh_shape
 from repro.models.transformer import Model
 from repro.serving.engine import Request, ServeEngine
 
@@ -25,6 +33,11 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="serve sharded over a data×model host mesh, e.g. "
+                         "'2x4' (needs that many devices; simulate on CPU "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before launch)")
     ap.add_argument("--pretune", action="store_true",
                     help="autotune the model's contraction working set "
                          "before serving (warm start for strategy='tuned')")
@@ -33,13 +46,20 @@ def main():
                          "$REPRO_TUNING_CACHE or ~/.cache/repro/tuning.json)")
     args = ap.parse_args()
 
+    mesh = None
+    if args.mesh:
+        data, model_par = parse_mesh_shape(args.mesh)
+        mesh = make_host_mesh(data, model_par)
+        print(f"mesh: {args.mesh} over {len(jax.devices())} "
+              f"{jax.default_backend()} devices")
+
     cfg = get_config(args.arch, smoke=args.smoke)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     t0 = time.perf_counter()
     engine = ServeEngine(
         cfg, params, slots=args.slots, max_len=args.max_len,
-        pretune=args.pretune, tuning_cache=args.tuning_cache,
+        pretune=args.pretune, tuning_cache=args.tuning_cache, mesh=mesh,
     )
     if args.pretune:
         print(f"pretune: {engine.pretune_stats} "

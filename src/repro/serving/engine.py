@@ -25,6 +25,7 @@ winners.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import jax
@@ -52,19 +53,51 @@ class ServeEngine:
                  max_len: int = 1024, greedy: bool = True,
                  pretune: bool = False, tuner=None,
                  tuning_cache=None,
-                 pretune_prompt_lens: tuple[int, ...] = (8, 16, 32)):
+                 pretune_prompt_lens: tuple[int, ...] = (8, 16, 32),
+                 mesh=None, sharding_rules=None):
+        """``mesh`` (a ``jax.sharding.Mesh``) serves *sharded*: params and
+        the slot-stacked decode cache are partitioned by the model zoo's
+        logical-axis rules (:mod:`repro.distributed.sharding` resolved
+        through :mod:`repro.launch.shardings`, size-aware — nondivisible
+        axes fall back to replicated), and every prefill/decode step runs
+        under the mesh + rules context so the models' ``logical``
+        annotations become real sharding constraints.  ``sharding_rules``
+        overrides the default :class:`ShardingRules` for the mesh.
+        """
         if cfg.encoder_only:
             raise ValueError(f"{cfg.arch_id} is encoder-only; nothing to serve")
         self.cfg, self.params = cfg, params
         self.slots = slots
         self.max_len = max_len
         self.greedy = greedy
+        self.mesh = mesh
+        self._rules = None
+        if mesh is not None:
+            from repro.distributed.sharding import ShardingRules
+            from repro.launch.shardings import param_logical_axes, tree_shardings
+
+            self._rules = sharding_rules or ShardingRules(mesh)
+            p_spec = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+            )
+            p_sh = tree_shardings(self._rules, param_logical_axes(p_spec), p_spec)
+            self.params = jax.device_put(params, p_sh)
         # slot-stacked cache: every leaf gains a leading (slots,) axis, so
         # each slot keeps an independent length/KV state.
         one = init_cache(cfg, 1, max_len)
         self.cache = jax.tree.map(
             lambda x: jnp.zeros((slots,) + x.shape, x.dtype), one
         )
+        if mesh is not None:
+            from repro.launch.shardings import cache_logical_axes, tree_shardings
+
+            c_spec = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.cache
+            )
+            c_sh = tree_shardings(
+                self._rules, cache_logical_axes(self.cache), c_spec
+            )
+            self.cache = jax.device_put(self.cache, c_sh)
         self.active: dict[int, Request] = {}   # slot -> request
         self._free = list(range(slots))
         decode_fn = jax.vmap(
@@ -82,6 +115,18 @@ class ServeEngine:
                 tuner=tuner, tuning_cache=tuning_cache,
                 prompt_lens=pretune_prompt_lens,
             )
+
+    @contextlib.contextmanager
+    def _mesh_ctx(self):
+        """Mesh + logical-sharding-rules context for model steps (no-op
+        single-device)."""
+        if self.mesh is None:
+            yield
+            return
+        from repro.distributed.sharding import use_rules
+
+        with self.mesh, use_rules(self._rules):
+            yield
 
     # ----------------------------------------------------------- autotuning
     def contraction_working_set(
@@ -131,10 +176,11 @@ class ServeEngine:
             return False
         slot = self._free.pop()
         one = init_cache(self.cfg, 1, self.max_len)
-        logits, one = self._prefill(
-            self.params, jnp.asarray(req.prompt[None]), one
-        )
-        self.cache = _write_slot(self.cache, one, slot)
+        with self._mesh_ctx():
+            logits, one = self._prefill(
+                self.params, jnp.asarray(req.prompt[None]), one
+            )
+            self.cache = _write_slot(self.cache, one, slot)
         first = int(jnp.argmax(logits[0])) if self.greedy else int(
             jax.random.categorical(jax.random.PRNGKey(req.rid), logits[0])
         )
@@ -148,9 +194,10 @@ class ServeEngine:
         """One step-locked decode across all active slots."""
         if not self.active:
             return
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self._tokens)
-        )
+        with self._mesh_ctx():
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self._tokens)
+            )
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))  # (slots,)
         for slot, req in list(self.active.items()):
             tok = int(nxt[slot])

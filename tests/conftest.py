@@ -1,0 +1,29 @@
+"""Pytest bootstrap: simulated host-device count for the multidevice suites.
+
+The sharded suites (``test_sharded_contract.py`` and the sharded half of
+``test_differential.py``) need several CPU devices.  XLA locks the host
+platform device count at first jax init, so the flag must be set before
+*any* test module imports jax — conftest is the one place pytest
+guarantees runs first.
+
+Gated on ``REPRO_HOST_DEVICES`` so the default tier-1 run keeps today's
+single device (and its runtime); the CI ``multidevice`` job (and anyone
+running the sharded suites locally) sets it:
+
+    REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m pytest -q \
+        tests/test_sharded_contract.py tests/test_differential.py
+
+Exporting ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` directly
+works too; this gate just composes with other XLA_FLAGS content.
+"""
+
+import os
+
+_n = os.environ.get("REPRO_HOST_DEVICES")
+if _n and "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={int(_n)} "
+        + os.environ.get("XLA_FLAGS", "")
+    ).strip()

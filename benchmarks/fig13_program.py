@@ -1,0 +1,133 @@
+"""Fig. 13 (extension): whole-program compilation vs per-step dispatch.
+
+The paper's single-kernel philosophy removes per-contraction copy and
+transpose overhead; ``repro.core.program`` extends the same discipline to
+whole expressions — plan once, compile once, execute many.  This
+benchmark measures what that buys over the eager front-end's per-call
+parse → plan → step-by-step dispatch on the two recurring working sets
+named in the ROADMAP:
+
+* the Tucker reconstruction chain (4 operands, the fig9/fig10 workload);
+* a serving decode trace — every contraction one transformer decode step
+  issues, replayed as a single multi-output compiled program vs eager
+  pairwise ``contract()`` calls.
+
+Derived column reports the eager µs and the speedup; the acceptance bar
+is compiled ≥ 1.3× faster on both workloads.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import rand
+from repro.core.contract import contract, record_contractions
+from repro.core.notation import parse_spec
+from repro.core.program import build_program, compile_program
+
+SIZES = (48, 96)
+RANK = 10
+ARCH = "minicpm-2b"
+
+
+def _median_us(fn, *args, iters: int = 30, warmup: int = 3) -> float:
+    """Median wall-time (µs) of ``fn(*args)`` as-is — no extra jit wrapper
+    (``fn`` may already be a compiled program or a deliberately eager
+    baseline)."""
+    if common.QUICK:
+        iters, warmup = min(iters, 5), min(warmup, 1)
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+# ------------------------------------------------------------- Tucker chain
+def _tucker_row(n: int):
+    spec = "ijk,mi,nj,pk->mnp"
+    G = rand(131, (RANK, RANK, RANK))
+    A, B, C = (rand(132 + s, (n, RANK)) for s in range(3))
+
+    prog = compile_program(spec, G, A, B, C)
+    t_prog = _median_us(prog, G, A, B, C)
+
+    def eager(*ops):
+        # the pre-program xeinsum semantics: re-plan and dispatch each
+        # pairwise step per call (use_cache=False forces the re-plan)
+        return compile_program(spec, *ops, use_cache=False).eager(*ops)
+
+    t_eager = _median_us(eager, G, A, B, C)
+    return (
+        f"fig13/tucker_chain_n{n}", t_prog,
+        f"eager_us={t_eager:.1f};speedup={t_eager / t_prog:.2f}",
+    )
+
+
+# ------------------------------------------------------- serving decode trace
+def _decode_trace():
+    """Every ``contract`` one decode step issues, at serving shapes."""
+    from repro.configs import get_config
+    from repro.models.transformer import Model
+
+    cfg = get_config(ARCH, smoke=True).with_(n_periods=1)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    cache = m.init_cache(1, 64)
+    toks = jnp.zeros((1, 1, 1), jnp.int32)[0]
+    with record_contractions() as rec:
+        jax.eval_shape(lambda p, c, t: m.decode_step(p, c, t),
+                       params, cache, toks)
+    return rec
+
+
+def _decode_row(quick: bool):
+    trace = _decode_trace()
+    if quick:
+        trace = trace[: min(len(trace), 24)]
+    rng = np.random.default_rng(13)
+    inputs, exprs, operands = {}, [], []
+    for i, (spec_str, dims, dtype_str) in enumerate(trace):
+        cs = parse_spec(spec_str)
+        a = jnp.asarray(
+            rng.standard_normal([dims[mm] for mm in cs.a_modes]), dtype_str
+        )
+        b = jnp.asarray(
+            rng.standard_normal([dims[mm] for mm in cs.b_modes]), dtype_str
+        )
+        inputs[f"a{i}"], inputs[f"b{i}"] = a, b
+        exprs.append((f"o{i}", spec_str, (f"a{i}", f"b{i}")))
+        operands += [a, b]
+    prog = compile_program(
+        build_program(inputs, exprs, outputs=tuple(e[0] for e in exprs))
+    )
+    t_prog = _median_us(lambda *ops: prog(*ops), *operands)
+
+    specs = [t[0] for t in trace]
+
+    def eager(*ops):
+        outs = []
+        for i, spec_str in enumerate(specs):
+            outs.append(contract(spec_str, ops[2 * i], ops[2 * i + 1]))
+        return outs
+
+    t_eager = _median_us(eager, *operands)
+    return (
+        f"fig13/decode_trace_{ARCH}", t_prog,
+        f"eager_us={t_eager:.1f};speedup={t_eager / t_prog:.2f};"
+        f"contractions={len(trace)}",
+    )
+
+
+def run(quick: bool = False):
+    rows = []
+    for n in (SIZES[:1] if quick else SIZES):
+        rows.append(_tucker_row(n))
+    rows.append(_decode_row(quick))
+    return rows

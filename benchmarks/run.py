@@ -28,6 +28,7 @@ MODULES = [
     "fig10_nary_path",
     "fig11_autotune",
     "fig12_sharded",
+    "fig13_program",
     "table2_cases",
 ]
 

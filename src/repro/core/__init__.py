@@ -3,13 +3,22 @@
 :mod:`repro.core.notation` — mode algebra and layout rules;
 :mod:`repro.core.planner`  — Algorithm 2 (pairwise plans) + cost model;
 :mod:`repro.core.contract` — pairwise execution on XLA / Pallas;
-:mod:`repro.core.einsum`   — the n-ary front-end with path planning.
+:mod:`repro.core.einsum`   — the n-ary front-end with path planning;
+:mod:`repro.core.program`  — whole-expression contraction programs
+(typed IR, pass pipeline, jitted cached executables);
+:mod:`repro.core.passes`   — the program pass pipeline.
 """
 
 from repro.core.contract import contract
 from repro.core.einsum import ContractionPath, contraction_path, xeinsum
 from repro.core.notation import ContractionSpec, parse_spec
 from repro.core.planner import Plan, contraction_flops, make_plan
+from repro.core.program import (
+    CompiledProgram,
+    ContractionProgram,
+    build_program,
+    compile_program,
+)
 
 __all__ = [
     "contract",
@@ -21,4 +30,8 @@ __all__ = [
     "Plan",
     "make_plan",
     "contraction_flops",
+    "ContractionProgram",
+    "CompiledProgram",
+    "build_program",
+    "compile_program",
 ]

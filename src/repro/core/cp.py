@@ -11,7 +11,6 @@ the cost model prefers for the shapes at hand.  No unfolding copies.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -29,11 +28,6 @@ class CPResult:
     rel_error: jax.Array
 
 
-def _mttkrp_1(T, B, C, ctr):
-    """MTTKRP mode-1: M_mr = Σ_np T_mnp B_nr C_pr."""
-    return ctr("mnp,nr,pr->mr", T, B, C)
-
-
 def cp_als(T, rank: int, *, n_iter: int = 25, strategy="auto", backend="xla",
            seed: int = 0) -> CPResult:
     m, n, p = T.shape
@@ -46,7 +40,16 @@ def cp_als(T, rank: int, *, n_iter: int = 25, strategy="auto", backend="xla",
     A = nvecs(contract("mnp,qnp->mq", T, T, strategy="direct"), rank)
     B = nvecs(contract("mnp,mqp->nq", T, T, strategy="direct"), rank)
     C = nvecs(contract("mnp,mnq->pq", T, T, strategy="direct"), rank)
-    ctr = functools.partial(xeinsum, strategy=strategy, backend=backend)
+
+    # The three MTTKRPs are the sweep's recurring working set: compile each
+    # once (repro.core.program — path-planned, jitted, cache-resident) and
+    # execute the same programs every iteration.
+    from repro.core.program import compile_program
+
+    kw = dict(strategy=strategy, backend=backend)
+    p_m1 = compile_program("mnp,nr,pr->mr", T, B, C, **kw)   # mode-1 MTTKRP
+    p_m2 = compile_program("mnp,mr,pr->nr", T, A, C, **kw)   # mode-2
+    p_m3 = compile_program("mnp,mr,nr->pr", T, A, B, **kw)   # mode-3
 
     def solve(mttkrp, X, Y):
         gram = (X.T @ X) * (Y.T @ Y)
@@ -55,11 +58,9 @@ def cp_als(T, rank: int, *, n_iter: int = 25, strategy="auto", backend="xla",
     @jax.jit
     def step(fac):
         A, B, C = fac
-        A = solve(_mttkrp_1(T, B, C, ctr), B, C)
-        # mode-2: M_nr = Σ_mp T_mnp A_mr C_pr
-        B = solve(ctr("mnp,mr,pr->nr", T, A, C), A, C)
-        # mode-3: M_pr = Σ_mn T_mnp A_mr B_nr
-        C = solve(ctr("mnp,mr,nr->pr", T, A, B), A, B)
+        A = solve(p_m1(T, B, C), B, C)
+        B = solve(p_m2(T, A, C), A, C)
+        C = solve(p_m3(T, A, B), A, B)
         return A, B, C
 
     fac = (A, B, C)

@@ -426,39 +426,33 @@ def _optimal_path(inputs, output, dims, shard=None) -> tuple[PathStep, ...]:
     return tuple(steps)
 
 
-def _tuned_path(spec, inputs, output, dims, dtype) -> ContractionPath:
-    """Re-rank candidate paths with *measured* step costs.
-
-    Takes the analytic optimizers' paths (auto's choice plus the greedy and
-    naive alternatives), prices each step from the autotuner's cache where
-    an entry exists — the measured best µs — and from the flop model
-    (bridged by :data:`repro.tuning.dispatch.ANALYTIC_FLOPS_PER_US`)
-    otherwise, then picks the cheapest path.  With an empty cache every
-    step falls back to the analytic price, reproducing ``optimize="auto"``.
-    """
-    from repro.tuning.dispatch import ANALYTIC_FLOPS_PER_US, get_dispatcher
-
-    disp = get_dispatcher()
+def _candidate_paths(spec, inputs, output, dims) -> list[ContractionPath]:
+    """The analytic candidate set tuned re-ranking chooses from: auto's
+    path plus the greedy and naive alternatives where they differ."""
     candidates = [_plan_path(spec, inputs, output, dims, "auto")]
     for method in ("greedy", "naive"):
         p = _plan_path(spec, inputs, output, dims, method)
         if all(p.steps != q.steps for q in candidates):
             candidates.append(p)
+    return candidates
 
-    def price(path: ContractionPath):
-        total, measured = 0.0, 0
-        for s in path.steps:
-            us = None
-            if s.spec.c_modes and s.spec.a_modes and s.spec.b_modes:
-                us = disp.step_us(s.spec, dims, dtype)
-            if us is not None:
-                total += us
-                measured += 1
-            else:
-                total += s.flops / ANALYTIC_FLOPS_PER_US
-        return (total, -measured)
 
-    chosen = min(candidates, key=price)
+def _tuned_path(spec, inputs, output, dims, dtype) -> ContractionPath:
+    """Re-rank candidate paths with *measured* step costs.
+
+    Takes the analytic optimizers' paths (:func:`_candidate_paths`) and
+    prices each with :func:`repro.tuning.dispatch.path_cost` — the
+    autotuner cache's measured best µs per step where an entry exists,
+    the flop model otherwise — then picks the cheapest.  With an empty
+    cache every step falls back to the analytic price, reproducing
+    ``optimize="auto"``.  The compiled-program pipeline exposes the same
+    re-ranking as :class:`repro.core.passes.TunedRerankPass`.
+    """
+    from repro.tuning.dispatch import get_dispatcher, path_cost
+
+    disp = get_dispatcher()
+    candidates = _candidate_paths(spec, inputs, output, dims)
+    chosen = min(candidates, key=lambda p: path_cost(p.steps, dims, dtype, disp))
     return dataclasses.replace(chosen, optimize="tuned")
 
 
@@ -570,12 +564,6 @@ def contraction_path(
 # Execution
 # --------------------------------------------------------------------------
 
-def _single_operand(modes: str, output: str, x):
-    if modes == output:
-        return x
-    return jnp.transpose(x, [modes.index(m) for m in output])
-
-
 def _pairwise(cs: ContractionSpec, a, b, strategy, backend, prefer, tiles=None):
     """Lower one path step through :func:`contract`, softening the strategy
     for steps the pairwise planner cannot express:
@@ -678,7 +666,15 @@ def xeinsum(
 
     Returns:
       The contracted array, with modes ordered as the spec's output.
+
+    Since the contraction-program refactor this is a thin wrapper over
+    :func:`repro.core.program.compile_program`: the spec is compiled into
+    a jitted single-expression program cached by canonical signature, so
+    repeated calls at the same shapes skip parsing, path planning and
+    dispatch entirely.
     """
+    from repro.core.program import compile_program  # deferred: higher layer
+
     arrays = [jnp.asarray(x) for x in operands]
     if not arrays:
         raise ValueError("xeinsum needs at least one operand")
@@ -687,88 +683,27 @@ def xeinsum(
         strategy, backend = "auto", "pallas"
     if mesh is None and (in_specs is not None or out_spec is not None):
         raise ValueError("in_specs/out_spec require mesh=")
-    if mesh is not None and strategy == "tuned":
-        raise ValueError(
-            "strategy='tuned' is single-device (the cache holds per-device "
-            "measurements); pick an analytic strategy for sharded execution"
-        )
-    if tiles is not None:
-        # mirror contract()'s rules eagerly — a tiles= override that no
-        # step could honor must error, not silently evaporate
-        if strategy == "tuned":
-            raise ValueError(
-                "tiles= cannot be combined with strategy='tuned' "
-                "(the tuner owns tile selection)"
-            )
-        if backend != "pallas":
-            raise ValueError("tiles= requires backend='pallas'")
-        from repro.tuning.candidates import validate_tiles  # deferred: no cycle
 
-        validate_tiles(tiles)
-
-    inputs, output = parse_nary(spec)
+    inputs, _ = parse_nary(spec)
     if len(arrays) != len(inputs):
         raise ValueError(f"spec has {len(inputs)} operands, got {len(arrays)}")
-    reduce_axes = _sum_only_axes(inputs, output)
-    if mesh is not None:
-        in_specs = _drop_reduced_pspecs(in_specs, inputs, reduce_axes)
-    arrays = [
-        jnp.sum(x, axis=axes) if axes else x
-        for x, axes in zip(arrays, reduce_axes)
-    ]
-    inputs = tuple(
-        "".join(m for i, m in enumerate(t) if i not in axes)
-        for t, axes in zip(inputs, reduce_axes)
+
+    # single-operand expressions have no contract step to carry out_spec:
+    # honor a requested sharding with an explicit device_put afterwards
+    single_out_spec = None
+    if len(arrays) == 1 and mesh is not None and out_spec is not None:
+        single_out_spec, out_spec = out_spec, None
+
+    prog = compile_program(
+        spec, *arrays,
+        optimize=optimize, strategy=strategy, backend=backend, tiles=tiles,
+        preferred_element_type=preferred_element_type, out_dtype=out_dtype,
+        mesh=mesh, in_specs=in_specs,
+        out_specs=(out_spec,) if out_spec is not None else None,
     )
-    dims = _infer_dims(inputs, [x.shape for x in arrays])
+    result = prog(*arrays)
+    if single_out_spec is not None:
+        from jax.sharding import NamedSharding
 
-    if len(arrays) == 1:
-        result = _single_operand(inputs[0], output, arrays[0]).astype(out_dtype)
-        if mesh is not None and out_spec is not None:
-            from jax.sharding import NamedSharding
-
-            result = jax.device_put(result, NamedSharding(mesh, out_spec))
-        return result
-
-    if isinstance(optimize, ContractionPath):
-        path = optimize
-        if path.inputs != inputs or path.output != output:
-            raise ValueError(
-                f"precomputed path is for {path.inputs}->{path.output}, "
-                f"not {inputs}->{output}"
-            )
-    else:
-        shard = _shard_ctx(inputs, in_specs, mesh) if mesh is not None else None
-        path = _plan_path(
-            spec, inputs, output, dims, optimize,
-            dtype=jnp.result_type(*arrays), shard=shard,
-        )
-
-    env = dict(enumerate(arrays))
-    if mesh is not None:
-        # sharded lowering: thread each intermediate's PartitionSpec into
-        # the next step (natural propagation; the final step applies the
-        # caller's out_spec)
-        penv = dict(enumerate(
-            in_specs if in_specs is not None else (None,) * len(arrays)
-        ))
-        for n, step in enumerate(path.steps):
-            a, b = env.pop(step.lhs), env.pop(step.rhs)
-            pa, pb = penv.pop(step.lhs), penv.pop(step.rhs)
-            last = n == len(path.steps) - 1
-            res, splan = _pairwise_sharded(
-                step.spec, a, b, pa, pb, out_spec if last else None,
-                strategy, backend, preferred_element_type, tiles, mesh,
-            )
-            env[step.out] = res
-            penv[step.out] = splan.out_spec
-        (result,) = env.values()
-        return result.astype(out_dtype)
-
-    for step in path.steps:
-        a, b = env.pop(step.lhs), env.pop(step.rhs)
-        env[step.out] = _pairwise(
-            step.spec, a, b, strategy, backend, preferred_element_type, tiles
-        )
-    (result,) = env.values()
-    return result.astype(out_dtype)
+        result = jax.device_put(result, NamedSharding(mesh, single_out_spec))
+    return result

@@ -1,0 +1,818 @@
+"""Contraction-program IR: whole einsum expressions as compiled objects.
+
+The paper's thesis is that a tensor contraction should lower to a small
+set of BLAS-like primitives without copy/transpose overhead.  The stack
+below this module delivers that *per pairwise step* — but an application
+is rarely one step.  Tucker's HOOI body is three multi-operand
+expressions sharing a TTM stage, attention decode issues the same handful
+of contractions every token, and eager :func:`repro.core.einsum.xeinsum`
+re-parses, re-plans and re-dispatches each of them on every call.  GETT
+("High-Performance Tensor Contraction without Transposition", Matthews
+2016) and the BLAS-mapping line (Di Napoli et al. 2013) both treat a
+contraction as a *compiled object* with an explicit lowering pipeline;
+this module is that treatment for whole expressions:
+
+    parse  →  passes  →  lower  →  execute (many times)
+
+* **IR** — a :class:`ContractionProgram` is a DAG of
+  :class:`ContractionStep` nodes over *named buffers*: the program inputs
+  plus named intermediates.  Freshly built programs hold one ``einsum``
+  node per expression; the pass pipeline rewrites them into ``contract``
+  / ``reduce`` / ``transpose`` nodes (see :mod:`repro.core.passes`).
+* **Passes** — path optimization, layout tie-break annotation, tuned
+  re-ranking, shard placement, CSE of repeated subexpressions, and
+  intermediate-liveness analysis run in order, each a pure
+  ``program -> program`` rewrite.
+* **Lowering** — the planned program becomes one jitted callable: every
+  step still executes through :func:`repro.core.contract.contract` (the
+  paper's planner/kernels), but XLA sees the *whole* expression, so
+  intermediates fuse, buffers are reused, and the Python/dispatch
+  overhead of per-step evaluation is paid once at compile time.
+  Program inputs named in ``donate=`` are donated to XLA
+  (``donate_argnums``), letting the executable reuse their buffers.
+* **Cache** — executables are cached process-wide by canonical program
+  signature (structure + shapes + dtypes + options), so the Nth call of
+  a recurring working set — a serving decode step, a HOOI iteration —
+  skips planning and compilation entirely.
+
+Two escape hatches keep the eager semantics reachable: execution falls
+back to the step-by-step interpreter while a
+:func:`repro.core.contract.record_contractions` recorder is active (a
+cached jaxpr would hide the per-step ``contract`` calls the recorder
+exists to see), and while ``strategy="tuned"`` still has unmeasured
+steps under a ``measure`` policy (measurement needs concrete operands,
+which a jitted trace never has).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import einsum as _einsum
+from repro.core.notation import ContractionSpec, parse_spec
+
+__all__ = [
+    "ProgramInput",
+    "ContractionStep",
+    "ContractionProgram",
+    "CompiledProgram",
+    "build_program",
+    "compile_program",
+    "program_signature",
+    "program_cache_stats",
+    "clear_program_cache",
+    "record_programs",
+]
+
+
+# --------------------------------------------------------------------------
+# IR
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProgramInput:
+    """One program operand: a named buffer with a fixed shape and dtype."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str                    # canonical dtype name ("float32", ...)
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractionStep:
+    """One node of the program DAG, in SSA form over named buffers.
+
+    ``op`` is one of:
+
+    * ``"einsum"``    — an unplanned n-ary expression (only in freshly
+      built programs; the path-optimization pass expands it);
+    * ``"contract"``  — one pairwise contraction, lowered through
+      :func:`repro.core.contract.contract`;
+    * ``"reduce"``    — sum over ``axes`` (sum-only modes, reduced before
+      planning);
+    * ``"transpose"`` — permute by ``axes`` (single-operand expressions;
+      an identity permutation is a no-op).
+    """
+
+    op: str
+    out: str
+    args: tuple[str, ...]
+    spec: str = ""                # n-ary spec (einsum) / pairwise spec (contract)
+    axes: tuple[int, ...] = ()    # reduce: summed axes; transpose: permutation
+    strategy: str = ""            # per-step strategy override ("" = program's)
+    # ---- pass annotations ----
+    kind: str = ""                # planner CaseKind (layout tie-break pass)
+    penalty: int = -1             # layout penalty (flat ≺ sb ≺ nested ≺ exc)
+    flops: int = 0                # cost-model flops (path optimization)
+    comm_bytes: int = 0           # estimated collective bytes/device (mesh)
+    in_pspecs: tuple = ()         # per-arg PartitionSpecs (shard placement)
+    out_pspec: Any = None         # result sharding (shard placement)
+    last_uses: tuple[str, ...] = ()   # buffers dead after this step (liveness)
+
+    def key(self) -> tuple:
+        """Structural identity — what makes two steps compute the same
+        value the same way (pass annotations that affect execution are
+        included; cost annotations are not)."""
+        return (
+            self.op, self.out, self.args, self.spec, self.axes,
+            self.strategy, self.in_pspecs, self.out_pspec,
+        )
+
+    def describe(self) -> str:
+        bits = [f"%{self.out} = {self.op}"]
+        if self.spec:
+            bits.append(self.spec)
+        if self.op in ("reduce", "transpose"):
+            bits.append(f"axes={self.axes}")
+        bits.append("(" + ", ".join(self.args) + ")")
+        if self.strategy:
+            bits.append(f"strategy={self.strategy}")
+        if self.kind:
+            bits.append(f"[{self.kind}]")
+        if self.flops:
+            bits.append(f"flops={self.flops}")
+        if self.comm_bytes:
+            bits.append(f"comm={self.comm_bytes}B")
+        if self.out_pspec is not None:
+            bits.append(f"pspec={self.out_pspec}")
+        if self.last_uses:
+            bits.append(f"frees={list(self.last_uses)}")
+        return " ".join(bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractionProgram:
+    """A DAG of :class:`ContractionStep` nodes with named intermediates."""
+
+    inputs: tuple[ProgramInput, ...]
+    steps: tuple[ContractionStep, ...]
+    outputs: tuple[str, ...]
+
+    @property
+    def input_names(self) -> tuple[str, ...]:
+        return tuple(i.name for i in self.inputs)
+
+    @property
+    def total_flops(self) -> int:
+        return sum(s.flops for s in self.steps)
+
+    def describe(self) -> str:
+        lines = [
+            "program("
+            + ", ".join(f"{i.name}:{i.dtype}{list(i.shape)}" for i in self.inputs)
+            + ") -> (" + ", ".join(self.outputs) + ")"
+        ]
+        lines += ["  " + s.describe() for s in self.steps]
+        return "\n".join(lines)
+
+    def validate(self) -> None:
+        """Raise ``ValueError`` on name clashes, references to unknown
+        buffers (the SSA/topological-order invariant) or unknown outputs."""
+        known = set()
+        for i in self.inputs:
+            if i.name in known:
+                raise ValueError(f"duplicate input name {i.name!r}")
+            known.add(i.name)
+        for s in self.steps:
+            for a in s.args:
+                if a not in known:
+                    raise ValueError(
+                        f"step {s.out!r} references unknown buffer {a!r} "
+                        f"(steps must be in topological order)"
+                    )
+            if s.out in known:
+                raise ValueError(f"duplicate buffer name {s.out!r}")
+            known.add(s.out)
+        for o in self.outputs:
+            if o not in known:
+                raise ValueError(f"output {o!r} is not a program buffer")
+
+
+def _aval_of(x) -> tuple[tuple[int, ...], str]:
+    """(shape, dtype name) of an array / ShapeDtypeStruct / shape tuple."""
+    shape = getattr(x, "shape", x)
+    dtype = getattr(x, "dtype", None)
+    return tuple(int(d) for d in shape), jnp.dtype(dtype or jnp.float32).name
+
+
+def build_program(
+    inputs: Mapping[str, Any],
+    exprs: Sequence,
+    outputs: Sequence[str] | None = None,
+) -> ContractionProgram:
+    """Build an (unplanned) program from named inputs and expressions.
+
+    Args:
+      inputs: ordered ``name -> array-like`` (arrays, ``ShapeDtypeStruct``
+        or bare shape tuples).  The order fixes the compiled callable's
+        positional signature.
+      exprs: ``(name, spec, args)`` or ``(name, spec, args, opts)``
+        tuples — ``spec`` an n-ary einsum string, ``args`` the names of
+        inputs or *earlier* expression results, ``opts`` currently
+        ``{"strategy": ...}`` to override the program strategy for this
+        expression's steps.
+      outputs: result buffer names (default: the last expression only).
+
+    Shapes and dtypes are propagated and validated eagerly, so a rank or
+    size mismatch raises here, not at execution.
+    """
+    ins = tuple(
+        ProgramInput(name, *_aval_of(v)) for name, v in dict(inputs).items()
+    )
+    steps = []
+    for expr in exprs:
+        if len(expr) == 3:
+            (name, spec, args), opts = expr, {}
+        elif len(expr) == 4:
+            name, spec, args, opts = expr
+        else:
+            raise ValueError(f"expr must be (name, spec, args[, opts]): {expr!r}")
+        unknown = set(opts) - {"strategy"}
+        if unknown:
+            raise ValueError(f"unknown expr options {sorted(unknown)}")
+        in_modes, _ = _einsum.parse_nary(spec)
+        if len(in_modes) != len(args):
+            raise ValueError(
+                f"expr {name!r}: spec has {len(in_modes)} operands, got "
+                f"{len(args)} args"
+            )
+        steps.append(ContractionStep(
+            op="einsum", out=name, args=tuple(args), spec=spec,
+            strategy=opts.get("strategy", ""),
+        ))
+    if outputs is None:
+        if not steps:
+            raise ValueError("a program needs at least one expression")
+        outputs = (steps[-1].out,)
+    prog = ContractionProgram(inputs=ins, steps=tuple(steps),
+                              outputs=tuple(outputs))
+    prog.validate()
+    propagate_shapes(prog)  # eager shape/dtype validation
+    return prog
+
+
+# --------------------------------------------------------------------------
+# Shape / dtype propagation
+# --------------------------------------------------------------------------
+
+def propagate_shapes(prog: ContractionProgram) -> tuple[dict, dict]:
+    """``(shapes, dtypes)`` for every buffer, validated step by step."""
+    shapes: dict[str, tuple[int, ...]] = {i.name: i.shape for i in prog.inputs}
+    dtypes: dict[str, Any] = {i.name: jnp.dtype(i.dtype) for i in prog.inputs}
+    for s in prog.steps:
+        arg_shapes = [shapes[a] for a in s.args]
+        arg_dtypes = [dtypes[a] for a in s.args]
+        if s.op == "einsum":
+            in_modes, out_modes = _einsum.parse_nary(s.spec)
+            dims = _einsum._infer_dims(in_modes, arg_shapes)
+            shapes[s.out] = tuple(dims[m] for m in out_modes)
+        elif s.op == "contract":
+            cs = parse_spec(s.spec)
+            dims = step_dims(cs, *arg_shapes)
+            shapes[s.out] = tuple(dims[m] for m in cs.c_modes)
+        elif s.op == "reduce":
+            shapes[s.out] = tuple(
+                d for i, d in enumerate(arg_shapes[0]) if i not in s.axes
+            )
+        elif s.op == "transpose":
+            shapes[s.out] = tuple(arg_shapes[0][i] for i in s.axes)
+        else:
+            raise ValueError(f"unknown step op {s.op!r}")
+        dtypes[s.out] = jnp.result_type(*arg_dtypes)
+    return shapes, dtypes
+
+
+def step_dims(cs: ContractionSpec, a_shape, b_shape) -> dict:
+    """Mode→size map of one pairwise step from its operand shapes."""
+    dims: dict = {}
+    for modes, shape in ((cs.a_modes, a_shape), (cs.b_modes, b_shape)):
+        if len(modes) != len(shape):
+            raise ValueError(
+                f"rank mismatch: shape {tuple(shape)} vs modes {modes!r}"
+            )
+        for m, d in zip(modes, shape):
+            if dims.setdefault(m, int(d)) != int(d):
+                raise ValueError(
+                    f"inconsistent size for mode {m!r}: {dims[m]} vs {d}"
+                )
+    return dims
+
+
+# --------------------------------------------------------------------------
+# Options + canonical signature
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProgramOptions:
+    """Everything besides the IR that shapes lowering and execution."""
+
+    optimize: Any = "auto"               # path optimizer (or ("path", ...) tag)
+    strategy: str = "auto"
+    backend: str = "xla"
+    tiles: tuple | None = None           # sorted (role, size) pairs
+    preferred_element_type: Any = jnp.float32
+    out_dtype: Any = None                # per-output dtype (single value)
+    donate: tuple[str, ...] = ()
+    mesh: Any = None
+    in_specs: tuple = ()                 # aligned to program inputs
+    out_specs: tuple = ()                # aligned to program outputs
+
+    @property
+    def tiles_dict(self) -> dict | None:
+        return dict(self.tiles) if self.tiles else None
+
+    def _mesh_key(self):
+        if self.mesh is None:
+            return None
+        return (
+            tuple(self.mesh.axis_names),
+            tuple(self.mesh.devices.shape),
+            tuple(int(d.id) for d in self.mesh.devices.flat),
+        )
+
+    def signature(self) -> tuple:
+        return (
+            self.optimize if isinstance(self.optimize, (str, tuple))
+            else str(self.optimize),
+            tuple(str(s) for s in self.in_specs),
+            tuple(str(s) for s in self.out_specs),
+        ) + self.exec_signature()
+
+    def exec_signature(self) -> tuple:
+        """The options that shape *execution* (not planning) — two
+        programs that planned to identical steps under these options can
+        share one jitted executor."""
+        return (
+            self.strategy, self.backend, self.tiles,
+            jnp.dtype(self.preferred_element_type).name,
+            jnp.dtype(self.out_dtype).name if self.out_dtype is not None else None,
+            self.donate, self._mesh_key(),
+        )
+
+
+def program_signature(prog: ContractionProgram, opts: ProgramOptions) -> tuple:
+    """Canonical cache key: program structure + operand avals + options.
+
+    Programs whose path choice depends on the tuning cache
+    (``optimize="tuned"`` / ``strategy="tuned"``) additionally fold in
+    the process dispatcher's cache fingerprint, so warming the tuning
+    cache invalidates (re-compiles) them instead of pinning a stale path.
+    """
+    sig = (
+        tuple((i.name, i.shape, i.dtype) for i in prog.inputs),
+        tuple(s.key() for s in prog.steps),
+        prog.outputs,
+        opts.signature(),
+    )
+    fp = _tuning_fingerprint(prog, opts)
+    if fp is not None:
+        sig += (("tuning",) + fp,)
+    return sig
+
+
+# --------------------------------------------------------------------------
+# Lowering / execution
+# --------------------------------------------------------------------------
+
+def _run_step(step: ContractionStep, args, opts: ProgramOptions):
+    if step.op == "contract":
+        cs = parse_spec(step.spec)
+        strategy = step.strategy or opts.strategy
+        if opts.mesh is not None:
+            return _einsum._pairwise_sharded(
+                cs, args[0], args[1],
+                step.in_pspecs[0] if step.in_pspecs else None,
+                step.in_pspecs[1] if step.in_pspecs else None,
+                step.out_pspec, strategy, opts.backend,
+                opts.preferred_element_type, opts.tiles_dict, opts.mesh,
+            )[0]
+        return _einsum._pairwise(
+            cs, args[0], args[1], strategy, opts.backend,
+            opts.preferred_element_type, opts.tiles_dict,
+        )
+    if step.op == "reduce":
+        return jnp.sum(args[0], axis=step.axes)
+    if step.op == "transpose":
+        if step.axes == tuple(range(len(step.axes))):
+            return args[0]
+        return jnp.transpose(args[0], step.axes)
+    raise RuntimeError(
+        f"cannot execute unexpanded {step.op!r} node — run the pass "
+        f"pipeline (compile_program) first"
+    )
+
+
+def _execute(prog: ContractionProgram, opts: ProgramOptions, arrays):
+    """The step interpreter — shared by the jitted and eager paths.
+
+    Liveness annotations drop dead buffers as soon as their last consumer
+    has run: eagerly that frees device memory mid-program; under jit it
+    simply mirrors what XLA's own liveness will do with the fused graph.
+    """
+    env = dict(zip((i.name for i in prog.inputs), arrays))
+    for step in prog.steps:
+        env[step.out] = _run_step(step, [env[a] for a in step.args], opts)
+        for dead in step.last_uses:
+            env.pop(dead, None)
+    out_dtype = opts.out_dtype
+    return tuple(
+        env[o].astype(out_dtype) if out_dtype is not None else env[o]
+        for o in prog.outputs
+    )
+
+
+class CompiledProgram:
+    """A lowered, jitted, cache-resident contraction program.
+
+    Call it with positional operands in program-input order; single-output
+    programs return the array, multi-output programs a tuple.
+    """
+
+    def __init__(self, prog: ContractionProgram, opts: ProgramOptions,
+                 signature: tuple, executor):
+        self.program = prog
+        self.options = opts
+        self.signature = signature
+        self._jit = executor
+        tuned_steps = tuple(
+            s for s in prog.steps
+            if s.op == "contract" and (s.strategy or opts.strategy) == "tuned"
+        )
+        self._has_tuned = bool(tuned_steps)
+        # precomputed (spec, dims, dtype) per tuned step, so the per-call
+        # measured-yet probe is a few dict lookups, not a re-analysis
+        self._tuned_lookups: tuple = ()
+        self._tuned_measured = False   # sticks once every step has an entry
+        if tuned_steps:
+            shapes, dtypes = propagate_shapes(prog)
+            lookups = []
+            for s in tuned_steps:
+                cs = parse_spec(s.spec)
+                if not (cs.c_modes and cs.a_modes and cs.b_modes):
+                    continue
+                dims = step_dims(cs, shapes[s.args[0]], shapes[s.args[1]])
+                dtype = jnp.result_type(dtypes[s.args[0]], dtypes[s.args[1]])
+                lookups.append((cs, dims, dtype))
+            self._tuned_lookups = tuple(lookups)
+
+    # ------------------------------------------------------------- execution
+    def __call__(self, *operands):
+        arrays = self._check(operands)
+        if self._use_eager(arrays):
+            outs = self.eager(*arrays)
+        else:
+            outs = self._jit(*arrays)
+        return outs[0] if len(self.program.outputs) == 1 else outs
+
+    def eager(self, *operands):
+        """Step-by-step interpreter (no jit) — the pre-program semantics.
+        Always returns the full outputs tuple (even for one output)."""
+        return _execute(self.program, self.options, self._check(operands))
+
+    def _check(self, operands):
+        prog = self.program
+        if len(operands) != len(prog.inputs):
+            raise ValueError(
+                f"program takes {len(prog.inputs)} operands "
+                f"({', '.join(prog.input_names)}), got {len(operands)}"
+            )
+        arrays = tuple(jnp.asarray(x) for x in operands)
+        for inp, x in zip(prog.inputs, arrays):
+            if tuple(x.shape) != inp.shape:
+                raise ValueError(
+                    f"operand {inp.name!r}: compiled for shape {inp.shape}, "
+                    f"got {tuple(x.shape)} — compile_program again for new "
+                    f"shapes"
+                )
+        return arrays
+
+    def _use_eager(self, arrays) -> bool:
+        from repro.core.contract import _ACTIVE_RECORDERS
+
+        if _ACTIVE_RECORDERS:
+            # a recorder wants to see every contract() call; a cached
+            # jaxpr would hide them
+            return True
+        if not self._has_tuned or self._tuned_measured:
+            return False
+        if any(isinstance(x, jax.core.Tracer) for x in arrays):
+            return False  # abstract operands cannot be measured anyway
+        from repro.tuning.dispatch import get_dispatcher
+
+        disp = get_dispatcher()
+        if disp.policy != "measure":
+            return False
+        for cs, dims, dtype in self._tuned_lookups:
+            if disp.lookup(cs, dims, dtype) is None:
+                return True  # unmeasured step: run eagerly so it can tune
+        self._tuned_measured = True  # entries never disappear: probe no more
+        return False
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def total_flops(self) -> int:
+        return self.program.total_flops
+
+    def describe(self) -> str:
+        return self.program.describe()
+
+
+# --------------------------------------------------------------------------
+# Program cache
+# --------------------------------------------------------------------------
+
+_LOCK = threading.Lock()
+_PROGRAMS: dict[tuple, CompiledProgram] = {}
+_EXECUTORS: dict[tuple, Any] = {}   # post-pass structural key -> jitted fn
+_STATS = {"hits": 0, "misses": 0}
+
+_ACTIVE_PROGRAM_RECORDERS: list[list] = []
+
+
+@contextlib.contextmanager
+def record_programs():
+    """Record every :func:`compile_program` resolution in this context
+    (cache hits included) as :class:`CompiledProgram` objects — the
+    *program working set* serving warm-up precompiles.  Yields the list."""
+    rec: list[CompiledProgram] = []
+    _ACTIVE_PROGRAM_RECORDERS.append(rec)
+    try:
+        yield rec
+    finally:
+        for i, r in enumerate(_ACTIVE_PROGRAM_RECORDERS):
+            if r is rec:
+                del _ACTIVE_PROGRAM_RECORDERS[i]
+                break
+
+
+def program_cache_stats() -> dict:
+    with _LOCK:
+        return {"programs": len(_PROGRAMS), "executors": len(_EXECUTORS),
+                **_STATS}
+
+
+def clear_program_cache() -> None:
+    with _LOCK:
+        _PROGRAMS.clear()
+        _EXECUTORS.clear()
+        _STATS["hits"] = _STATS["misses"] = 0
+
+
+def _tuning_fingerprint(prog: ContractionProgram, opts: ProgramOptions):
+    """The process tuning cache's fingerprint iff this program's execution
+    reads it (``strategy="tuned"`` anywhere), else ``None``.  Folded into
+    both the program signature and the executor key: a tuned executor
+    bakes the dispatcher's winners in at trace time, so a cache change
+    must invalidate the executable, not just the program wrapper."""
+    uses_tuned = (
+        opts.optimize == "tuned" or opts.strategy == "tuned"
+        or any(s.strategy == "tuned" for s in prog.steps)
+    )
+    if not uses_tuned:
+        return None
+    from repro.tuning.dispatch import get_dispatcher  # deferred: no cycle
+
+    disp = get_dispatcher()
+    return (disp.policy, disp.cache.fingerprint())
+
+
+def _executor_for(prog: ContractionProgram, opts: ProgramOptions):
+    """The jitted executor, shared across programs that lowered to the
+    same steps (e.g. two path optimizers that chose the same order)."""
+    key = (
+        tuple((i.name, i.shape, i.dtype) for i in prog.inputs),
+        tuple(s.key() for s in prog.steps),
+        prog.outputs,
+        opts.exec_signature(),
+        _tuning_fingerprint(prog, opts),
+    )
+    with _LOCK:
+        fn = _EXECUTORS.get(key)
+    if fn is not None:
+        return fn
+
+    names = prog.input_names
+
+    def run(*arrays):
+        return _execute(prog, opts, arrays)
+
+    donate = tuple(i for i, n in enumerate(names) if n in opts.donate)
+    fn = jax.jit(run, donate_argnums=donate) if donate else jax.jit(run)
+    with _LOCK:
+        fn = _EXECUTORS.setdefault(key, fn)
+    return fn
+
+
+# --------------------------------------------------------------------------
+# compile_program
+# --------------------------------------------------------------------------
+
+def _steps_from_path(path, arg_names: tuple[str, ...], out: str,
+                     strategy: str = "") -> list[ContractionStep]:
+    """Pre-planned :class:`~repro.core.einsum.ContractionPath` → contract
+    steps (SSA ids become named buffers)."""
+    names = {i: n for i, n in enumerate(arg_names)}
+    steps = []
+    for n, s in enumerate(path.steps):
+        name = out if n == len(path.steps) - 1 else f"%{out}.{n}"
+        names[s.out] = name
+        steps.append(ContractionStep(
+            op="contract", out=name, args=(names[s.lhs], names[s.rhs]),
+            spec=s.spec.spec_str(), strategy=strategy,
+            kind=s.kind, flops=s.flops, comm_bytes=s.comm_bytes,
+        ))
+    return steps
+
+
+def _single_expr_program(spec: str, operands, optimize) -> ContractionProgram:
+    """Build the one-expression program behind ``compile_program(spec, ...)``
+    / :func:`repro.core.einsum.xeinsum`."""
+    in_modes, output = _einsum.parse_nary(spec)
+    if len(operands) != len(in_modes):
+        raise ValueError(
+            f"spec has {len(in_modes)} operands, got {len(operands)}"
+        )
+    names = tuple(f"%{i}" for i in range(len(operands)))
+    inputs = dict(zip(names, operands))
+    if isinstance(optimize, _einsum.ContractionPath):
+        # precomputed path: emit contract steps directly (plus the sum-only
+        # reductions the path planner assumes already happened)
+        reduce_axes = _einsum._sum_only_axes(in_modes, output)
+        arg_names, steps = [], []
+        for n, (t, axes) in enumerate(zip(in_modes, reduce_axes)):
+            if axes:
+                steps.append(ContractionStep(
+                    op="reduce", out=f"%{n}r", args=(names[n],), axes=axes,
+                ))
+                arg_names.append(f"%{n}r")
+            else:
+                arg_names.append(names[n])
+        reduced = tuple(
+            "".join(m for i, m in enumerate(t) if i not in axes)
+            for t, axes in zip(in_modes, reduce_axes)
+        )
+        if optimize.inputs != reduced or optimize.output != output:
+            raise ValueError(
+                f"precomputed path is for {optimize.inputs}->{optimize.output}, "
+                f"not {reduced}->{output}"
+            )
+        if len(arg_names) == 1:
+            modes = reduced[0]
+            steps.append(ContractionStep(
+                op="transpose", out="out", args=(arg_names[0],),
+                axes=tuple(modes.index(m) for m in output),
+            ))
+        else:
+            steps.extend(_steps_from_path(optimize, tuple(arg_names), "out"))
+        prog = ContractionProgram(
+            inputs=tuple(ProgramInput(n, *_aval_of(v))
+                         for n, v in inputs.items()),
+            steps=tuple(steps), outputs=("out",),
+        )
+        prog.validate()
+        propagate_shapes(prog)
+        return prog
+    return build_program(inputs, [("out", spec, names)])
+
+
+def _validate_options(prog, optimize, strategy, backend, tiles, mesh):
+    if not isinstance(optimize, (_einsum.ContractionPath, tuple)):
+        if optimize not in ("auto", "greedy", "optimal", "naive", "tuned"):
+            raise ValueError(f"unknown optimize mode {optimize!r}")
+    if mesh is not None and (
+        strategy == "tuned" or any(s.strategy == "tuned" for s in prog.steps)
+    ):
+        raise ValueError(
+            "strategy='tuned' is single-device (the cache holds per-device "
+            "measurements); pick an analytic strategy for sharded execution"
+        )
+    if mesh is not None and optimize == "tuned":
+        raise ValueError(
+            "optimize='tuned' re-ranks with single-device measurements; "
+            "use 'auto'/'greedy'/'optimal'/'naive' with mesh="
+        )
+    if tiles is not None:
+        if strategy == "tuned":
+            raise ValueError(
+                "tiles= cannot be combined with strategy='tuned' "
+                "(the tuner owns tile selection)"
+            )
+        if backend != "pallas":
+            raise ValueError("tiles= requires backend='pallas'")
+        from repro.tuning.candidates import validate_tiles  # deferred: no cycle
+
+        validate_tiles(dict(tiles) if not isinstance(tiles, dict) else tiles)
+
+
+def compile_program(
+    program: ContractionProgram | str,
+    *operands,
+    optimize="auto",
+    strategy: str = "auto",
+    backend: str = "xla",
+    tiles: dict | None = None,
+    preferred_element_type=jnp.float32,
+    out_dtype=None,
+    mesh=None,
+    in_specs=None,
+    out_specs=None,
+    donate: Sequence[str] = (),
+    pipeline=None,
+    use_cache: bool = True,
+) -> CompiledProgram:
+    """Compile a contraction program into a jitted, cached executable.
+
+    Args:
+      program: a :class:`ContractionProgram` from :func:`build_program`
+        (``operands`` must then be empty — shapes come from the IR), or an
+        n-ary einsum spec string with one operand (array or aval) per spec
+        operand — the single-expression convenience
+        :func:`repro.core.einsum.xeinsum` wraps.
+      optimize: path optimizer per expression (``"auto"`` | ``"greedy"``
+        | ``"optimal"`` | ``"naive"`` | ``"tuned"``), or — spec form only
+        — a precomputed :class:`~repro.core.einsum.ContractionPath`.
+      strategy/backend/tiles/preferred_element_type/out_dtype: per-step
+        execution knobs, exactly as :func:`repro.core.contract.contract`.
+      mesh/in_specs/out_specs: shard placement — ``in_specs`` one
+        ``PartitionSpec`` (or None) per program input, ``out_specs`` one
+        per program output (requested reshardings).
+      donate: names of program inputs whose buffers XLA may reuse
+        (``donate_argnums``).  Validated by the liveness pass: a donated
+        input must be consumed by the program and must not be returned.
+      pipeline: override the default pass pipeline
+        (:data:`repro.core.passes.DEFAULT_PIPELINE`).  Custom pipelines
+        bypass the program cache — pass identity is not part of the
+        canonical signature.
+      use_cache: set False to force a fresh compile (benchmarking the
+        per-call planning cost).
+
+    Returns:
+      A :class:`CompiledProgram`; repeated calls with the same canonical
+      signature return the same object.
+    """
+    if isinstance(program, str):
+        prog = _single_expr_program(program, operands, optimize)
+        if isinstance(optimize, _einsum.ContractionPath):
+            optimize = ("path",)  # steps already carry the plan
+    else:
+        if operands:
+            raise ValueError(
+                "operands are only accepted with a spec string; a "
+                "ContractionProgram carries its own input avals"
+            )
+        prog = program
+        prog.validate()
+
+    _validate_options(prog, optimize, strategy, backend, tiles, mesh)
+    if mesh is None and (in_specs is not None or out_specs is not None):
+        raise ValueError("in_specs/out_specs require mesh=")
+
+    n_in, n_out = len(prog.inputs), len(prog.outputs)
+    norm_in = tuple(in_specs) if in_specs is not None else (None,) * n_in
+    norm_out = tuple(out_specs) if out_specs is not None else (None,) * n_out
+    if len(norm_in) != n_in:
+        raise ValueError(f"{n_in} program inputs but {len(norm_in)} in_specs")
+    if len(norm_out) != n_out:
+        raise ValueError(f"{n_out} program outputs but {len(norm_out)} out_specs")
+
+    opts = ProgramOptions(
+        optimize=optimize, strategy=strategy, backend=backend,
+        tiles=tuple(sorted(tiles.items())) if tiles else None,
+        preferred_element_type=preferred_element_type, out_dtype=out_dtype,
+        donate=tuple(donate), mesh=mesh,
+        in_specs=norm_in, out_specs=norm_out,
+    )
+    if pipeline is not None:
+        use_cache = False  # pass identity is not in the canonical signature
+
+    sig = program_signature(prog, opts)
+    if use_cache:
+        with _LOCK:
+            hit = _PROGRAMS.get(sig)
+            if hit is not None:
+                _STATS["hits"] += 1
+        if hit is not None:
+            for rec in _ACTIVE_PROGRAM_RECORDERS:
+                rec.append(hit)
+            return hit
+    with _LOCK:
+        _STATS["misses"] += 1
+
+    from repro.core import passes as _passes  # deferred: passes import us
+
+    planned = _passes.run_pipeline(
+        prog, opts, pipeline if pipeline is not None else None
+    )
+    compiled = CompiledProgram(planned, opts, sig, _executor_for(planned, opts))
+    if use_cache:
+        with _LOCK:
+            compiled = _PROGRAMS.setdefault(sig, compiled)
+    for rec in _ACTIVE_PROGRAM_RECORDERS:
+        rec.append(compiled)
+    return compiled

@@ -68,33 +68,55 @@ def hooi(
     backend: Literal["xla", "pallas"] = "xla",
     jit: bool = True,
 ) -> TuckerResult:
-    """Higher-order orthogonal iteration (paper Algorithm 1)."""
+    """Higher-order orthogonal iteration (paper Algorithm 1).
+
+    The body's recurring contraction working set is compiled **once** as
+    three :mod:`repro.core.program` contraction programs (the split
+    follows the data dependencies — each factor update consumes the
+    eigendecomposition of the previous one) and executed per iteration
+    from the program cache; with ``jit=False`` every iteration still runs
+    the same jitted executables rather than re-planning step by step.
+    """
     i, j, k = ranks
     xctr = functools.partial(xeinsum, strategy=strategy, backend=backend)
+    from repro.core.program import build_program, compile_program
 
     def _factor_from_gram(g, r):
         _, vecs = jnp.linalg.eigh(g)
         return vecs[:, ::-1][:, :r]
 
+    A, B, C = init_hosvd(T, ranks, strategy, backend)
+    kw = dict(strategy=strategy, backend=backend)
+    # Y_mjk = T_mnp B_nj C_pk (Alg 1 l.4), its gram Y_(1)·Y_(1)ᵀ (leading
+    # left SVs = top eigvecs — no unfolding transpose is ever
+    # materialized), and the dominant T·C stage staged explicitly so the
+    # Y_(1) and Y_(2) updates share it: one program, two outputs.
+    p1 = compile_program(build_program(
+        {"T": T, "C": C, "B": B},
+        [("t1", "mnp,pk->mnk", ("T", "C")),
+         ("y1", "mnk,nj->mjk", ("t1", "B")),
+         ("g1", "mjk,qjk->mq", ("y1", "y1"), {"strategy": "direct"})],
+        outputs=("g1", "t1")), **kw)
+    # Y_ink = T_mnp A_mi C_pk (l.6), via the shared t1
+    t1_aval = jax.ShapeDtypeStruct((T.shape[0], T.shape[1], k), T.dtype)
+    p2 = compile_program(build_program(
+        {"t1": t1_aval, "A": A},
+        [("y2", "mnk,mi->ink", ("t1", "A")),
+         ("g2", "ink,iqk->nq", ("y2", "y2"), {"strategy": "direct"})]), **kw)
+    # Y_ijp = T_mnp A_mi B_nj (l.8) — no shared stage; path-planned
+    p3 = compile_program(build_program(
+        {"T": T, "A": A, "B": B},
+        [("y3", "mnp,mi,nj->ijp", ("T", "A", "B")),
+         ("g3", "ijp,ijq->pq", ("y3", "y3"), {"strategy": "direct"})]), **kw)
+
     def body(fac):
         A, B, C = fac
-        # Y_mjk = T_mnp B_nj C_pk  (Alg 1 l.4).  The dominant T·C stage is
-        # staged explicitly so the Y_(1) and Y_(2) updates share it even
-        # without jit (XLA CSE would only recover it under jit).
-        t1 = xctr("mnp,pk->mnk", T, C)
-        y1 = xctr("mnk,nj->mjk", t1, B)
-        # leading left SVs of Y_(1) = top eigvecs of Y_(1)·Y_(1)ᵀ — computed
-        # as a contraction, so no unfolding transpose is ever materialized.
-        A = _factor_from_gram(contract("mjk,qjk->mq", y1, y1, strategy="direct"), i)
-        # Y_ink = T_mnp A_mi C_pk  (l.6)
-        y2 = xctr("mnk,mi->ink", t1, A)
-        B = _factor_from_gram(contract("ink,iqk->nq", y2, y2, strategy="direct"), j)
-        # Y_ijp = T_mnp A_mi B_nj  (l.8) — no shared stage; path-planned
-        y3 = xctr("mnp,mi,nj->ijp", T, A, B)
-        C = _factor_from_gram(contract("ijp,ijq->pq", y3, y3, strategy="direct"), k)
+        g1, t1 = p1(T, C, B)
+        A = _factor_from_gram(g1, i)
+        B = _factor_from_gram(p2(t1, A), j)
+        C = _factor_from_gram(p3(T, A, B), k)
         return A, B, C
 
-    A, B, C = init_hosvd(T, ranks, strategy, backend)
     step = jax.jit(body) if jit else body
     fac = (A, B, C)
     for _ in range(n_iter):

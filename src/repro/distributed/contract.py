@@ -57,6 +57,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.notation import ContractionSpec, parse_spec
+from repro.distributed.sharding import specs_equal
 
 __all__ = [
     "resolve_mode_axes",
@@ -385,6 +386,14 @@ def sharded_contract(
         )
     dims = infer_dims(cs, A, B)
     plan = plan_sharded(cs, dims, mesh=mesh, in_specs=in_specs, out_spec=out_spec)
+    if out_spec is not None and not specs_equal(plan.out_spec, out_spec):
+        # specs_equal, not ==: jax trims trailing Nones, so the planned
+        # spec and the caller's spelling of the same sharding may differ
+        # textually while naming identical placements
+        raise AssertionError(
+            f"planned out_spec {plan.out_spec} does not honor requested "
+            f"{out_spec}"
+        )
     sizes = _axis_sizes(mesh)
 
     def nshards(group: AxisGroup) -> int:

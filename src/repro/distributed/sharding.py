@@ -31,7 +31,34 @@ import threading
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["ShardingRules", "use_rules", "logical", "named_sharding", "DEFAULT_RULES"]
+__all__ = [
+    "ShardingRules",
+    "use_rules",
+    "logical",
+    "named_sharding",
+    "specs_equal",
+    "DEFAULT_RULES",
+]
+
+
+def specs_equal(a: P | None, b: P | None) -> bool:
+    """``PartitionSpec`` equality modulo trailing ``None`` entries.
+
+    jax trims trailing ``None``s when it materializes a sharding, so the
+    spec read back from an array (``x.sharding.spec``) may be shorter than
+    the one requested: ``P("y", None)`` comes back as ``P("y")``, and the
+    two do **not** compare equal with ``==``.  Every comparison of
+    partition specs in this repo must go through this helper — comparing
+    with ``==`` (or asserting against both spellings per call site) is
+    exactly the bug class this centralizes away.  ``None`` compares as
+    the fully-replicated spec ``P()``.
+    """
+    ta = tuple(a) if a is not None else ()
+    tb = tuple(b) if b is not None else ()
+    n = max(len(ta), len(tb))
+    ta += (None,) * (n - len(ta))
+    tb += (None,) * (n - len(tb))
+    return ta == tb
 
 DEFAULT_RULES = {
     "batch": ("pod", "data"),

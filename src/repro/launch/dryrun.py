@@ -44,6 +44,7 @@ from repro.launch.shardings import (
 from repro.models.transformer import decode_step, forward, init_cache, init_params, lm_loss, prefill
 from repro.training.data import make_batch_specs
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.utils import compiled_costs
 
 COLLECTIVES = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -215,11 +216,7 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
-    if isinstance(cost, (list, tuple)):  # older jaxlibs return [dict]
-        cost = cost[0] if cost else {}
-    if cost is None:
-        cost = {}
+    cost = compiled_costs(compiled)
     coll = collective_bytes(compiled.as_text())
 
     record = {

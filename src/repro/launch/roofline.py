@@ -138,7 +138,9 @@ def body_costs(arch: str, shape_name: str, cfg_overrides: dict | None = None):
 
 
 def _costs_of(compiled):
-    cost = compiled.cost_analysis()
+    from repro.utils import compiled_costs
+
+    cost = compiled_costs(compiled)  # list-vs-dict normalized (jax 0.4.37)
     coll = collective_bytes(compiled.as_text())
     return {
         "flops": cost.get("flops", 0.0),

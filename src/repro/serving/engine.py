@@ -21,6 +21,13 @@ the tuned buckets (other lengths fall back to the analytic plan — misses
 inside jit never trigger measurement).  Models configured with
 ``contract_strategy="tuned"`` then dispatch straight to measured
 winners.
+
+Independently, ``precompile=True`` (the default) compiles the model's
+contraction-*program* working set before the first request: decode and
+bucketed prefill are traced abstractly so every ``xeinsum`` the model
+issues is parsed, path-planned and lowered exactly once into the
+process program cache (:mod:`repro.core.program`); each serve-time
+request/decode step then executes the cached programs.
 """
 
 from __future__ import annotations
@@ -54,6 +61,7 @@ class ServeEngine:
                  pretune: bool = False, tuner=None,
                  tuning_cache=None,
                  pretune_prompt_lens: tuple[int, ...] = (8, 16, 32),
+                 precompile: bool = True,
                  mesh=None, sharding_rules=None):
         """``mesh`` (a ``jax.sharding.Mesh``) serves *sharded*: params and
         the slot-stacked decode cache are partitioned by the model zoo's
@@ -110,10 +118,18 @@ class ServeEngine:
         self._tokens = np.zeros((slots, 1, 1), np.int32)
         self.tuner = tuner
         self.pretune_stats: dict | None = None
+        self.program_stats: dict | None = None
+        # pretune BEFORE precompile: warming the tuning cache bumps its
+        # fingerprint, which would invalidate every tuned program (and its
+        # traced executor) precompile just built
         if pretune:
             self.pretune_stats = self.warmup_tuning(
                 tuner=tuner, tuning_cache=tuning_cache,
                 prompt_lens=pretune_prompt_lens,
+            )
+        if precompile:
+            self.program_stats = self.precompile_programs(
+                prompt_lens=pretune_prompt_lens
             )
 
     @contextlib.contextmanager
@@ -129,26 +145,61 @@ class ServeEngine:
             yield
 
     # ----------------------------------------------------------- autotuning
+    def _trace_working_set(self, recorder, prompt_lens) -> list:
+        """Abstractly trace decode + bucketed prefills under ``recorder``
+        (a context manager yielding a list — ``record_contractions`` or
+        ``record_programs``) and return the recording.
+
+        ``jax.eval_shape`` runs no FLOPs, so this is cheap even for large
+        models; decode shapes are prompt-independent, prefill shapes carry
+        the prompt length (one trace per bucket).  The traces go through
+        fresh lambda wrappers: eval_shape caches jaxprs by function
+        identity, and a cached trace would bypass the model code the
+        recorder needs to observe.
+        """
+        one = init_cache(self.cfg, 1, self.max_len)
+        step = jnp.zeros((self.slots, 1, 1), jnp.int32)
+        decode = lambda p, c, t: self._decode_fn(p, c, t)  # noqa: E731
+        prefill = lambda p, t, c: self._prefill_fn(p, t, c)  # noqa: E731
+        with self._mesh_ctx(), recorder() as rec:
+            jax.eval_shape(decode, self.params, self.cache, step)
+            for plen in dict.fromkeys(min(p, self.max_len) for p in prompt_lens):
+                toks = jnp.zeros((1, plen), jnp.int32)
+                jax.eval_shape(prefill, self.params, toks, one)
+        return rec
+
     def contraction_working_set(
         self, prompt_lens: tuple[int, ...] = (8, 16, 32)
     ) -> list[tuple]:
-        """The ``(spec, dims, dtype)`` set of decode + bucketed prefills.
-
-        Traced abstractly (``jax.eval_shape`` — no FLOPs run), so this is
-        cheap even for large models.  Decode shapes are prompt-independent;
-        prefill shapes carry the prompt length, so one trace per
-        ``prompt_lens`` bucket.
-        """
+        """The ``(spec, dims, dtype)`` set of decode + bucketed prefills
+        (see :meth:`_trace_working_set`)."""
         from repro.core.contract import record_contractions
 
-        one = init_cache(self.cfg, 1, self.max_len)
-        step = jnp.zeros((self.slots, 1, 1), jnp.int32)
-        with record_contractions() as rec:
-            jax.eval_shape(self._decode_fn, self.params, self.cache, step)
-            for plen in dict.fromkeys(min(p, self.max_len) for p in prompt_lens):
-                toks = jnp.zeros((1, plen), jnp.int32)
-                jax.eval_shape(self._prefill_fn, self.params, toks, one)
-        return rec
+        return self._trace_working_set(record_contractions, prompt_lens)
+
+    def precompile_programs(
+        self, prompt_lens: tuple[int, ...] = (8, 16, 32)
+    ) -> dict:
+        """Compile the model's contraction-*program* working set up front.
+
+        Traces decode and each prefill bucket abstractly
+        (``jax.eval_shape`` — no FLOPs run) under
+        :func:`repro.core.program.record_programs`, so every ``xeinsum``
+        the forward passes issue lands in the process program cache:
+        parsed, path-planned, pass-pipelined and lowered exactly once.
+        The serve-time jits then re-trace against warm programs and every
+        request/decode step executes the cached executables.  Returns
+        ``{"programs": unique, "calls": recorded, "steps": total}``.
+        """
+        from repro.core.program import record_programs
+
+        rec = self._trace_working_set(record_programs, prompt_lens)
+        unique = {p.signature for p in rec}
+        return {
+            "programs": len(unique),
+            "calls": len(rec),
+            "steps": sum(len(p.program.steps) for p in rec),
+        }
 
     def warmup_tuning(self, *, tuner=None, tuning_cache=None,
                       prompt_lens: tuple[int, ...] = (8, 16, 32)) -> dict:

@@ -21,6 +21,7 @@ Durability rules:
 
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import string
@@ -35,6 +36,9 @@ from repro.core.notation import ContractionSpec, parse_spec
 __all__ = ["SCHEMA_VERSION", "TuningCache", "canonical_key", "canonical_spec"]
 
 SCHEMA_VERSION = 1
+
+#: per-process unique ids for cache instances (see TuningCache.fingerprint)
+_CACHE_UIDS = itertools.count()
 
 
 def canonical_spec(spec: str | ContractionSpec, dims: dict) -> tuple[str, tuple]:
@@ -98,8 +102,19 @@ class TuningCache:
     def __init__(self, path: str | os.PathLike | None = None):
         self.path = os.fspath(path) if path is not None else None
         self.entries: dict[str, dict] = {}
+        self._uid = next(_CACHE_UIDS)   # distinguishes cache instances
+        self._version = 0               # bumped on every put
         if self.path is not None:
             self._load()
+
+    def fingerprint(self) -> tuple:
+        """A value that changes whenever this cache's content may have:
+        (instance uid, mutation counter, size).  Consumers that bake
+        decisions off cache content (the compiled-program signature for
+        ``tuned`` programs) key on this so content changes — including
+        same-size overwrites or a swapped-in cache instance — invalidate
+        them."""
+        return (self._uid, self._version, len(self.entries))
 
     # ------------------------------------------------------------- load/save
     def _load(self) -> None:
@@ -163,6 +178,7 @@ class TuningCache:
         if not _valid_entry(entry):
             raise ValueError(f"malformed tuning entry for {key!r}: {entry!r}")
         self.entries[key] = entry
+        self._version += 1
         if persist:
             self.save()
 

@@ -48,6 +48,7 @@ __all__ = [
     "get_dispatcher",
     "set_dispatcher",
     "default_cache_path",
+    "path_cost",
     "ANALYTIC_FLOPS_PER_US",
 ]
 
@@ -243,6 +244,36 @@ class Dispatcher:
             "entries": len(self.cache),
             "policy": self.policy,
         }
+
+
+# -------------------------------------------------------------- path pricing
+def path_cost(steps, dims: dict, dtype, dispatcher: "Dispatcher | None" = None
+              ) -> tuple[float, int]:
+    """Measured-cost price of a contraction path: ``(total µs, -n_measured)``.
+
+    ``steps`` may be :class:`~repro.core.einsum.PathStep` or
+    :class:`~repro.core.program.ContractionStep` objects — anything with a
+    pairwise ``spec`` and analytic ``flops``.  Steps with a cache entry
+    cost their measured best µs; the rest fall back to the flop model
+    bridged by :data:`ANALYTIC_FLOPS_PER_US`.  The second component
+    prefers the path with more measured (trusted) steps on µs ties.
+    This is the objective behind ``optimize="tuned"`` — both the eager
+    re-rank (:func:`repro.core.einsum.contraction_path`) and the
+    compiled-program pass (:class:`repro.core.passes.TunedRerankPass`).
+    """
+    disp = dispatcher or get_dispatcher()
+    total, measured = 0.0, 0
+    for s in steps:
+        cs = s.spec if isinstance(s.spec, ContractionSpec) else parse_spec(s.spec)
+        us = None
+        if cs.c_modes and cs.a_modes and cs.b_modes:
+            us = disp.step_us(cs, dims, dtype)
+        if us is not None:
+            total += us
+            measured += 1
+        else:
+            total += s.flops / ANALYTIC_FLOPS_PER_US
+    return (total, -measured)
 
 
 # ------------------------------------------------------------------ default

@@ -1,0 +1,23 @@
+"""Small shared utilities with no dependencies on the engine layers."""
+
+from __future__ import annotations
+
+__all__ = ["normalize_cost_analysis", "compiled_costs"]
+
+
+def normalize_cost_analysis(cost) -> dict:
+    """Normalize ``compiled.cost_analysis()`` output to a plain dict.
+
+    jax 0.4.37-era jaxlibs return a single-element ``[dict]`` (one entry
+    per computation), newer ones a bare ``dict``, and some backends
+    ``None``.  Every reader of ``cost_analysis`` must go through this
+    helper instead of re-discovering the list case.
+    """
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+def compiled_costs(compiled) -> dict:
+    """``normalize_cost_analysis`` applied to a compiled executable."""
+    return normalize_cost_analysis(compiled.cost_analysis())

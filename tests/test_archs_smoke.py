@@ -11,6 +11,8 @@ from repro.configs import get_config, list_archs
 from repro.models.ssm import init_mamba, init_ssm_cache, mamba_decode_step, mamba_mixer
 from repro.models.transformer import Model
 
+pytestmark = pytest.mark.slow  # 10-arch sweep: the other multi-minute module
+
 
 def _smoke_batch(cfg, key, B=2, S=32):
     kt, kf, kl = jax.random.split(key, 3)

@@ -13,6 +13,10 @@ oracle across every ``contract()``/``xeinsum()`` strategy×backend:
   CPU — expensive, so sampled every 5th spec);
 * n-ary: every path optimizer (``naive`` / ``greedy`` / ``auto``), with
   implicit-output and sum-only-mode specs in the mix;
+* compiled programs: a slice of the same seeded specs also executes
+  through :func:`repro.core.program.compile_program` and must match the
+  ``jnp.einsum`` oracle — and be **bit-identical** to ``xeinsum`` (which
+  routes through the same cached program);
 * sharded: when ≥8 devices are visible (``REPRO_HOST_DEVICES=8``, see
   ``conftest.py``), the same specs run through ``xeinsum(...,
   mesh=...)`` with seeded mode shardings and must match their
@@ -33,12 +37,16 @@ from repro.core.contract import contract
 from repro.core.einsum import xeinsum
 from repro.core.notation import CaseKind, ContractionSpec
 from repro.core.planner import make_plan
+from repro.core.program import compile_program
+
+pytestmark = pytest.mark.slow  # the fuzzer is the multi-minute tier-1 tail
 
 SEED = 20260801
 N_PAIRWISE = 120
 N_NARY = 80
 CHUNK = 10  # specs per pytest case: granular repro without 200 items
 PALLAS_EVERY = 5
+PROGRAM_EVERY = 2  # compiled-program slice of the seeded specs
 
 multidevice = pytest.mark.skipif(
     jax.device_count() < 8,
@@ -172,6 +180,41 @@ def test_nary_optimizers_match_einsum(chunk):
                 np.asarray(got), ref, atol=1e-4, rtol=1e-4,
                 err_msg=f"spec #{i} {spec} dims={dims} strategy=pallas",
             )
+
+
+# ------------------------------------------ compiled programs vs oracle
+@pytest.mark.parametrize("chunk", _chunks(N_NARY // PROGRAM_EVERY))
+def test_compiled_programs_match_oracle_and_eager(chunk):
+    """Every other seeded n-ary spec (plus its pairwise sibling) through
+    the compiled-program path: allclose to ``jnp.einsum``, bit-identical
+    to ``xeinsum`` (same cached program, by construction)."""
+    lo = chunk * CHUNK * PROGRAM_EVERY
+    hi = min((chunk + 1) * CHUNK * PROGRAM_EVERY, N_NARY)
+    for i in range(lo, hi, PROGRAM_EVERY):
+        rng = np.random.default_rng([SEED, 10_000 + i])
+        spec, dims = gen_nary(rng)
+        inputs = spec.split("->")[0].split(",")
+        ops = operands_for(inputs, dims, rng)
+        ref = np.asarray(jnp.einsum(spec, *ops))
+        prog = compile_program(spec, *ops)
+        got = np.asarray(prog(*ops))
+        np.testing.assert_allclose(
+            got, ref, atol=1e-4, rtol=1e-4,
+            err_msg=f"spec #{i} {spec} dims={dims} via compile_program",
+        )
+        assert np.array_equal(got, np.asarray(xeinsum(spec, *ops))), (
+            f"spec #{i} {spec}: program and xeinsum results diverge"
+        )
+        # and a pairwise sibling from the same seed space
+        rng2 = np.random.default_rng([SEED, i])
+        cs, pdims = gen_pairwise(rng2)
+        A, B = operands_for((cs.a_modes, cs.b_modes), pdims, rng2)
+        pref = np.asarray(jnp.einsum(cs.spec_str(), A, B))
+        pgot = np.asarray(compile_program(cs.spec_str(), A, B)(A, B))
+        np.testing.assert_allclose(
+            pgot, pref, atol=1e-4, rtol=1e-4,
+            err_msg=f"pairwise #{i} {cs.spec_str()} via compile_program",
+        )
 
 
 # ------------------------------------------- sharded vs single-device

@@ -28,6 +28,7 @@ from repro.distributed.contract import (
     resolve_mode_axes,
     sharded_contract,
 )
+from repro.distributed.sharding import specs_equal
 
 pytestmark = pytest.mark.skipif(
     jax.device_count() < 8,
@@ -65,7 +66,7 @@ def test_batch_sharded_no_collectives(mesh):
     )
     assert not plan.has_communication
     got = assert_matches("bmk,bkn->bmn", (A, B), mesh, (P("y"), P("y")))
-    assert got.sharding.spec == P("y")
+    assert specs_equal(got.sharding.spec, P("y"))
 
 
 def test_contracted_mode_sharded_psum(mesh):
@@ -100,7 +101,7 @@ def test_reduce_scatter_when_out_spec_shards_reduced_axis(mesh):
         "mk,kn->mn", (A, B), mesh, (P("x", "y"), P("y", None)),
         out_spec=P("x", "y"),
     )
-    assert got.sharding.spec == P("x", "y")
+    assert specs_equal(got.sharding.spec, P("x", "y"))
 
 
 def test_replicated_everywhere(mesh):
@@ -120,7 +121,7 @@ def test_all_gather_to_replicated_output(mesh):
         "mk,kn->mn", (A, B), mesh, (P("x", None), P(None, "y")),
         out_spec=P(None, None),
     )
-    assert got.sharding.spec in (P(None, None), P())
+    assert specs_equal(got.sharding.spec, P(None, None))
 
 
 def test_local_slice_to_freshly_sharded_output(mesh):
@@ -135,7 +136,7 @@ def test_local_slice_to_freshly_sharded_output(mesh):
         "mk,kn->mn", (A, B), mesh, (P(None, None), P(None, None)),
         out_spec=P(None, "y"),
     )
-    assert got.sharding.spec == P(None, "y")
+    assert specs_equal(got.sharding.spec, P(None, "y"))
 
 
 def test_full_reshard_gather_then_slice(mesh):
@@ -144,7 +145,7 @@ def test_full_reshard_gather_then_slice(mesh):
         "mk,kn->mn", (A, B), mesh, (P("x", None), P(None, None)),
         out_spec=P("y", None),
     )
-    assert got.sharding.spec in (P("y", None), P("y"))  # jax trims trailing None
+    assert specs_equal(got.sharding.spec, P("y", None))  # modulo trailing None
 
 
 def test_tuple_axis_group_batch(mesh):

@@ -1,0 +1,241 @@
+"""Fig. 14 (extension): continuous-batching runtime vs the fixed-slot engine.
+
+The paper's STRIDEDBATCHEDGEMM assumes a uniform batch; serving traffic
+is the opposite — Poisson arrivals, ragged prompt lengths, fluctuating
+occupancy.  This benchmark drives both serving stacks over the *same*
+arrival trace and measures what the runtime's three mechanisms buy:
+
+* **bucketed program specialization** — live shapes snap onto a small
+  power-of-two lattice compiled once, where the legacy engine rebuilds a
+  prefill executable for every distinct prompt length it has not seen;
+* **bucketed decode** — decode launches size to the active-slot bucket
+  instead of always paying the full slot count;
+* **grouped StridedBatchedGEMM** — the variable-batch kernel runs a
+  ragged group set padded per-group to tile multiples, vs the same
+  kernel forced uniform by padding every group to the worst case.
+
+Rows:
+
+* ``fig14_serve_{legacy,runtime}`` — µs/token over the measured trace
+  (derived: tok/s; the runtime row derives the speedup — the acceptance
+  bar is ``speedup > 1``);
+* ``fig14_token_identity`` — greedy outputs identical across stacks on
+  the shared request set (acceptance: True);
+* ``fig14_zero_recompiles`` — bucket compiles during the measured trace
+  after warm-up (acceptance: 0);
+* ``fig14_grouped_vs_padded`` — grouped kernel µs vs worst-case-padded
+  uniform batch µs (derived: speedup and the tile-work ratio).
+
+``benchmarks/run.py`` writes these results to ``BENCH_runtime.json`` so
+the serving perf trajectory is machine-readable from this PR on.
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+
+ARCH = "minicpm-2b"
+
+#: results of the last ``run()`` — ``benchmarks.run`` serializes this to
+#: ``BENCH_runtime.json``.
+LAST_RESULTS: dict = {}
+
+
+# ----------------------------------------------------------------- traces
+def poisson_trace(cfg, *, n_requests: int, rate: float, max_new: int,
+                  len_hi: int, seed: int):
+    """``(arrival_tick, Request)`` pairs: exponential gaps, ragged lens."""
+    from repro.runtime.scheduler import Request
+
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_requests)
+    ticks = np.floor(np.cumsum(gaps)).astype(int)
+    lens = np.clip(
+        np.rint(rng.lognormal(mean=1.6, sigma=0.7, size=n_requests)),
+        1, len_hi,
+    ).astype(int)
+    return [
+        (int(t), Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=int(ln)).astype(np.int32),
+            max_new_tokens=max_new,
+        ))
+        for i, (t, ln) in enumerate(zip(ticks, lens))
+    ]
+
+
+def drive_legacy(engine, trace) -> float:
+    """The fixed-slot loop: admit arrivals when a slot is free, decode
+    every slot step-locked.  Returns wall seconds."""
+    waiting = collections.deque()
+    i, tick, n = 0, 0, len(trace)
+    t0 = time.perf_counter()
+    while i < n or waiting or engine.active:
+        while i < n and trace[i][0] <= tick:
+            waiting.append(trace[i][1])
+            i += 1
+        while waiting and engine.admit(waiting[0]):
+            waiting.popleft()
+        engine.step()
+        tick += 1
+    return time.perf_counter() - t0
+
+
+def drive_runtime(rt, trace) -> float:
+    """The continuous-batching loop: submit arrivals, tick."""
+    i, tick, n = 0, 0, len(trace)
+    t0 = time.perf_counter()
+    while i < n or rt.scheduler.has_work():
+        while i < n and trace[i][0] <= tick:
+            rt.submit(trace[i][1])
+            i += 1
+        rt.tick()
+        tick += 1
+    return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------- grouped kernel
+def _grouped_row(quick: bool):
+    """Grouped (per-group padding) vs the same kernel forced uniform
+    (every group padded to the largest) — the ragged-batch claim in
+    kernel-only form."""
+    from repro.kernels.grouped_gemm import (
+        grouped_gemm_pallas, pack_groups,
+    )
+
+    tiles = {"u": 8, "v": 32, "k": 32}
+    n_groups = 4 if quick else 8
+    rng = np.random.default_rng(14)
+    shapes = [
+        (int(m), 32, 64)
+        for m in rng.integers(1, 33, size=n_groups)
+    ]
+    shapes[0] = (64, 32, 64)  # one worst-case group dominates the padding
+    As = [jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+          for m, n, k in shapes]
+    Bs = [jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+          for m, n, k in shapes]
+
+    def launch(As_, Bs_, shapes_):
+        A_flat, B_flat, descs, _ = pack_groups(As_, Bs_, tiles)
+        grid = (
+            max(-(-m // tiles["u"]) for m, n, k in shapes_),
+            max(-(-n // tiles["v"]) for m, n, k in shapes_),
+            max(-(-k // tiles["k"]) for m, n, k in shapes_),
+        )
+        out_cols = int(B_flat.shape[1])
+
+        def fn(a, b):
+            return grouped_gemm_pallas(
+                a, b, descs, grid_dims=grid, tiles=tiles, out_cols=out_cols)
+
+        return fn, A_flat, B_flat
+
+    m_max, n_max, k_max = (max(s[i] for s in shapes) for i in range(3))
+    padded_shapes = [(m_max, n_max, k_max)] * len(shapes)
+    pad_A = [jnp.zeros((m_max, k_max), jnp.float32).at[:m, :k].set(a)
+             for (m, n, k), a in zip(shapes, As)]
+    pad_B = [jnp.zeros((k_max, n_max), jnp.float32).at[:k, :n].set(b)
+             for (m, n, k), b in zip(shapes, Bs)]
+
+    g_fn, gA, gB = launch(As, Bs, shapes)
+    p_fn, pA, pB = launch(pad_A, pad_B, padded_shapes)
+    t_grouped = common.time_fn(g_fn, gA, gB, iters=10, warmup=2)
+    t_padded = common.time_fn(p_fn, pA, pB, iters=10, warmup=2)
+
+    def tile_count(shape_list):
+        return sum(
+            -(-m // tiles["u"]) * -(-n // tiles["v"]) * -(-k // tiles["k"])
+            for m, n, k in shape_list
+        )
+
+    work_ratio = tile_count(padded_shapes) / tile_count(shapes)
+    return t_grouped, t_padded, work_ratio
+
+
+# --------------------------------------------------------------------- run
+def run(quick: bool = False):
+    from repro.configs import get_config
+    from repro.models.transformer import Model
+    from repro.runtime.engine import ServingRuntime
+    from repro.serving.engine import ServeEngine
+
+    quick = quick or common.QUICK
+    cfg = get_config(ARCH, smoke=True).with_(n_periods=1)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+
+    slots = 2 if quick else 4
+    chunk = 8
+    max_len = 64
+    kw = dict(rate=0.7, max_new=4 if quick else 8, len_hi=24)
+    warm_trace = lambda: poisson_trace(  # noqa: E731
+        cfg, n_requests=4 if quick else 8, seed=141, **kw)
+    trace = lambda: poisson_trace(  # noqa: E731
+        cfg, n_requests=8 if quick else 20, seed=142, **kw)
+
+    legacy = ServeEngine(cfg, params, slots=slots, max_len=max_len,
+                         precompile=False)
+    drive_legacy(legacy, warm_trace())
+    t_legacy = drive_legacy(legacy, (measured_legacy := trace()))
+    tok_legacy = sum(len(r.output) for _, r in measured_legacy)
+
+    rt = ServingRuntime(cfg, params, slots=slots, max_len=max_len,
+                        prefill_chunk=chunk, precompile=False)
+    drive_runtime(rt, warm_trace())
+    compiles_warm = rt.buckets.compiles
+    rt.metrics.reset()        # JSON metrics cover the measured trace only
+    rt.buckets.reset_stats()  # ... including the bucket hit rate
+    rt.metrics.start()
+    t_runtime = drive_runtime(rt, (measured_rt := trace()))
+    rt.metrics.stop()
+    tok_runtime = sum(len(r.output) for _, r in measured_rt)
+    recompiles = rt.buckets.compiles - compiles_warm
+
+    identical = all(
+        a.output == b.output
+        for (_, a), (_, b) in zip(measured_legacy, measured_rt)
+    )
+    tps_legacy = tok_legacy / t_legacy
+    tps_runtime = tok_runtime / t_runtime
+    speedup = tps_runtime / tps_legacy
+
+    t_grouped, t_padded, work_ratio = _grouped_row(quick)
+
+    global LAST_RESULTS
+    LAST_RESULTS = {
+        "arch": ARCH,
+        "quick": bool(quick),
+        "slots": slots,
+        "prefill_chunk": chunk,
+        "trace_requests": len(measured_rt),
+        "legacy": {"wall_s": t_legacy, "tokens": tok_legacy,
+                   "tok_per_s": tps_legacy},
+        "runtime": {"wall_s": t_runtime, "tokens": tok_runtime,
+                    "tok_per_s": tps_runtime,
+                    **rt.metrics.snapshot(rt.buckets)},
+        "speedup": speedup,
+        "token_identity": identical,
+        "recompiles_after_warmup": recompiles,
+        "bucket_keys": [list(map(str, k[:2])) for k in rt.buckets.keys()],
+        "grouped_gemm": {"grouped_us": t_grouped, "padded_us": t_padded,
+                         "speedup": t_padded / t_grouped,
+                         "tile_work_ratio": work_ratio},
+    }
+    return [
+        ("fig14_serve_legacy", t_legacy * 1e6 / tok_legacy,
+         f"tok/s={tps_legacy:.2f}"),
+        ("fig14_serve_runtime", t_runtime * 1e6 / tok_runtime,
+         f"tok/s={tps_runtime:.2f} speedup={speedup:.2f}x"),
+        ("fig14_token_identity", 0.0, f"identical={identical}"),
+        ("fig14_zero_recompiles", 0.0, f"recompiles={recompiles}"),
+        ("fig14_grouped_vs_padded", t_grouped,
+         f"padded_us={t_padded:.1f} speedup={t_padded / t_grouped:.2f}x "
+         f"tile_work_ratio={work_ratio:.2f}"),
+    ]

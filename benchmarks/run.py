@@ -6,10 +6,16 @@ Prints ``name,us_per_call,derived`` CSV.  Run:
 ``--quick`` is the CI profile: repeats are clamped globally
 (``benchmarks.common.QUICK``) and modules whose ``run()`` accepts a
 ``quick`` keyword also shrink their problem sizes.
+
+Modules that publish a ``LAST_RESULTS`` dict (``fig14_runtime``) get it
+written as machine-readable JSON next to the repo root —
+``BENCH_runtime.json`` tracks the serving perf trajectory PR over PR
+(override the directory with ``REPRO_BENCH_DIR``).
 """
 
 import argparse
 import inspect
+import json
 import os
 import sys
 import traceback
@@ -29,8 +35,32 @@ MODULES = [
     "fig11_autotune",
     "fig12_sharded",
     "fig13_program",
+    "fig14_runtime",
     "table2_cases",
 ]
+
+#: module → JSON artifact written after a successful run.
+JSON_ARTIFACTS = {"fig14_runtime": "BENCH_runtime.json"}
+
+
+def _write_json_artifact(mod, mod_name: str) -> None:
+    payload = getattr(mod, "LAST_RESULTS", None)
+    if not payload:
+        return
+    out_dir = os.environ.get(
+        "REPRO_BENCH_DIR",
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    name = JSON_ARTIFACTS[mod_name]
+    if common.QUICK:
+        # quick-profile numbers are not comparable PR-over-PR: never
+        # clobber the tracked full-profile artifact with them
+        root, ext = os.path.splitext(name)
+        name = f"{root}.quick{ext}"
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -53,6 +83,8 @@ def main() -> None:
                 emit(mod.run(quick=args.quick))
             else:
                 emit(mod.run())
+            if mod_name in JSON_ARTIFACTS:
+                _write_json_artifact(mod, mod_name)
         except Exception:
             failed.append(mod_name)
             traceback.print_exc()

@@ -1,0 +1,223 @@
+"""Grouped (variable-batch) StridedBatchedGEMM as a Pallas kernel.
+
+The paper's STRIDEDBATCHEDGEMM (Listing 1) walks ``P`` *identically
+shaped* problems at a fixed stride — exactly what breaks under serving
+traffic, where the live batch is ragged: each request contributes its own
+``(m, n, k)`` (a prefill chunk, a decode token against its own KV
+length).  Padding every group to the worst case restores uniformity but
+wastes FLOPs and bandwidth quadratically in the spread; running one GEMM
+per group forfeits the single-kernel dispatch the paper's primitive
+exists to provide.
+
+This module is the variable-batch extension: one kernel launch over a
+*group descriptor table*.  Operands are packed row-major into flat 2D
+buffers (each group padded only up to its tile multiples, never to the
+largest group) and an int32 descriptor row per group carries its padded
+``(m, n, k)`` plus the row offsets of its A/B/C blocks:
+
+    desc[g] = (m_p, n_p, k_p, a_row_off, b_row_off, c_row_off)
+
+The grid is ``(group, u_blocks, v_blocks, k_blocks)`` sized by the
+*largest* group; blocks outside a group's extent are predicated off with
+``pl.when``, so small groups cost only their own tiles plus a predicate
+test.  Within a group the inner loops are exactly the paper's kernel:
+k-innermost accumulation into an f32 VMEM scratch tile, emitted on the
+group's last k step.
+
+As in :mod:`repro.kernels.sb_gemm`, ``interpret=True`` validates the
+kernel off-TPU.  On real TPUs the flat operands should be staged
+HBM→VMEM with explicit DMA (the descriptor-driven ``pl.ds`` loads below
+mark the tile fetches to convert); the descriptor table itself belongs in
+SMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are optional (interpret mode does not need them)
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+__all__ = [
+    "GROUPED_DEFAULT_TILES",
+    "GroupProblem",
+    "pack_groups",
+    "grouped_gemm_pallas",
+    "grouped_gemm_ref",
+]
+
+#: role → tile size for the grouped kernel.  ``v`` rides the lane axis
+#: (128 wide on TPU); ``u`` is kept at the sublane granularity so ragged
+#: groups pad by at most 7 rows — the whole point of the variable batch.
+GROUPED_DEFAULT_TILES = {"u": 8, "v": 128, "k": 128}
+
+#: descriptor row layout (int32): padded dims + packed row offsets.
+DESC_FIELDS = ("m_p", "n_p", "k_p", "a_off", "b_off", "c_off")
+
+
+class GroupProblem:
+    """Static shape record of one group: ``(m, k) @ (k, n)``."""
+
+    __slots__ = ("m", "n", "k")
+
+    def __init__(self, m: int, n: int, k: int):
+        if min(m, n, k) < 1:
+            raise ValueError(f"group dims must be positive: {(m, n, k)}")
+        self.m, self.n, self.k = int(m), int(n), int(k)
+
+    def __repr__(self):
+        return f"GroupProblem(m={self.m}, n={self.n}, k={self.k})"
+
+
+def _pad_up(d: int, tile: int) -> int:
+    return -(-d // tile) * tile
+
+
+def pack_groups(As, Bs, tiles: dict | None = None):
+    """Pack per-group operands into flat buffers + a descriptor table.
+
+    ``As[g]`` is ``(m_g, k_g)``, ``Bs[g]`` is ``(k_g, n_g)``.  Each group
+    is zero-padded to its tile multiples (exact for a contraction) and
+    appended row-wise.  Returns ``(A_flat, B_flat, descs, problems)``
+    where ``descs`` is the ``(G, 6)`` int32 table of
+    :data:`DESC_FIELDS` and ``problems`` the unpadded
+    :class:`GroupProblem` list (needed to slice results back out).
+    """
+    tiles = {**GROUPED_DEFAULT_TILES, **(tiles or {})}
+    if len(As) != len(Bs) or not As:
+        raise ValueError("need one A and one B per group (at least one group)")
+    problems, rows = [], []
+    for A, B in zip(As, Bs):
+        if A.ndim != 2 or B.ndim != 2 or A.shape[1] != B.shape[0]:
+            raise ValueError(
+                f"group operands must be (m,k)/(k,n) matrices: "
+                f"{A.shape} @ {B.shape}"
+            )
+        problems.append(GroupProblem(A.shape[0], B.shape[1], A.shape[1]))
+    mp = [_pad_up(p.m, tiles["u"]) for p in problems]
+    np_ = [_pad_up(p.n, tiles["v"]) for p in problems]
+    kp = [_pad_up(p.k, tiles["k"]) for p in problems]
+    a_off = np.concatenate([[0], np.cumsum(mp)[:-1]])
+    b_off = np.concatenate([[0], np.cumsum(kp)[:-1]])
+    c_off = a_off
+    k_max, n_max = max(kp), max(np_)
+    for g, p in enumerate(problems):
+        rows.append((mp[g], np_[g], kp[g], int(a_off[g]), int(b_off[g]),
+                     int(c_off[g])))
+    descs = jnp.asarray(np.asarray(rows, np.int32))
+
+    traced = any(isinstance(x, jax.core.Tracer) for x in (*As, *Bs))
+    if not traced:
+        # concrete operands: pack host-side — two device transfers total
+        # instead of 2·G dispatches each copying the whole flat buffer
+        A_np = np.zeros((int(sum(mp)), k_max), jnp.dtype(As[0].dtype))
+        B_np = np.zeros((int(sum(kp)), n_max), jnp.dtype(Bs[0].dtype))
+        for g, (A, B, p) in enumerate(zip(As, Bs, problems)):
+            A_np[int(a_off[g]):int(a_off[g]) + p.m, :p.k] = np.asarray(A)
+            B_np[int(b_off[g]):int(b_off[g]) + p.k, :p.n] = np.asarray(B)
+        return jnp.asarray(A_np), jnp.asarray(B_np), descs, problems
+
+    A_flat = jnp.zeros((int(sum(mp)), k_max), As[0].dtype)
+    B_flat = jnp.zeros((int(sum(kp)), n_max), Bs[0].dtype)
+    for g, (A, B) in enumerate(zip(As, Bs)):
+        A_flat = jax.lax.dynamic_update_slice(
+            A_flat, jnp.asarray(A), (int(a_off[g]), 0)
+        )
+        B_flat = jax.lax.dynamic_update_slice(
+            B_flat, jnp.asarray(B), (int(b_off[g]), 0)
+        )
+    return A_flat, B_flat, descs, problems
+
+
+def _kernel(desc_ref, a_ref, b_ref, o_ref, acc_ref, *, tu: int, tv: int,
+            tk: int, out_dtype, upcast: bool):
+    """One grid step of one group: accumulate / emit a C tile."""
+    g = pl.program_id(0)
+    u, v, kk = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+    m, n, k = desc_ref[g, 0], desc_ref[g, 1], desc_ref[g, 2]
+    a_off, b_off, c_off = desc_ref[g, 3], desc_ref[g, 4], desc_ref[g, 5]
+    valid = (u * tu < m) & (v * tv < n) & (kk * tk < k)
+
+    @pl.when(valid & (kk == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(valid)
+    def _accumulate():
+        a = a_ref[pl.ds(a_off + u * tu, tu), pl.ds(kk * tk, tk)]
+        b = b_ref[pl.ds(b_off + kk * tk, tk), pl.ds(v * tv, tv)]
+        if upcast:  # interpret-on-CPU: XLA:CPU lacks some bf16 dot thunks
+            a, b = a.astype(jnp.float32), b.astype(jnp.float32)
+        acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(valid & (kk == k // tk - 1))
+    def _emit():
+        o_ref[pl.ds(c_off + u * tu, tu), pl.ds(v * tv, tv)] = (
+            acc_ref[...].astype(out_dtype)
+        )
+
+
+def grouped_gemm_pallas(
+    A_flat,
+    B_flat,
+    descs,
+    *,
+    grid_dims: tuple[int, int, int],
+    tiles: dict | None = None,
+    out_cols: int,
+    out_dtype=None,
+    interpret: bool = True,
+):
+    """Single-launch grouped GEMM over packed operands.
+
+    ``grid_dims = (u_blocks_max, v_blocks_max, k_blocks_max)`` — the
+    per-group block counts of the *largest* group (static; the packing in
+    :func:`pack_groups` makes every per-group count ≤ these).
+    ``out_cols`` is the packed C width (``max n_p``).  The output shares
+    A's packed row layout: group ``g`` occupies rows
+    ``c_off .. c_off+m_p``, columns ``0 .. n_p``.
+    """
+    tiles = {**GROUPED_DEFAULT_TILES, **(tiles or {})}
+    out_dtype = out_dtype or jnp.result_type(A_flat.dtype, B_flat.dtype)
+    tu, tv, tk = tiles["u"], tiles["v"], tiles["k"]
+    n_groups = int(descs.shape[0])
+    grid = (n_groups,) + tuple(int(d) for d in grid_dims)
+    out_shape = jax.ShapeDtypeStruct((A_flat.shape[0], out_cols), out_dtype)
+
+    kwargs = {}
+    if pltpu is not None and not interpret:  # pragma: no cover (TPU only)
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        )
+    scratch = (
+        pltpu.VMEM((tu, tv), jnp.float32)
+        if pltpu is not None
+        else jax.ShapeDtypeStruct((tu, tv), jnp.float32)
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, tu=tu, tv=tv, tk=tk, out_dtype=out_dtype,
+            upcast=interpret and A_flat.dtype != jnp.float32,
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=None)] * 3,
+        out_specs=pl.BlockSpec(memory_space=None),
+        out_shape=out_shape,
+        scratch_shapes=[scratch],
+        interpret=interpret,
+        **kwargs,
+    )(descs, A_flat, B_flat)
+
+
+def grouped_gemm_ref(As, Bs):
+    """Reference: one ``jnp.dot`` per group (the unfused baseline)."""
+    return [jnp.dot(A, B, preferred_element_type=jnp.float32).astype(
+        jnp.result_type(A.dtype, B.dtype)) for A, B in zip(As, Bs)]

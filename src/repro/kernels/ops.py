@@ -17,7 +17,10 @@ from repro.core.notation import CaseKind
 from repro.core.planner import Plan
 from repro.kernels.sb_gemm import DEFAULT_TILES, sb_gemm_pallas
 
-__all__ = ["execute_plan", "sb_contract", "plan_roles", "padded_dim", "EXT_BATCH_TILE"]
+__all__ = [
+    "execute_plan", "sb_contract", "plan_roles", "padded_dim",
+    "EXT_BATCH_TILE", "grouped_matmul",
+]
 
 #: brick depth for the extended-transpose kernel (paper §III-E): how many
 #: stride-1-batched matrices are staged in VMEM per load.
@@ -96,6 +99,54 @@ def sb_contract(
     )
     slicer = tuple(slice(0, dims[m]) for m in spec_c)
     return out[slicer]
+
+
+def grouped_matmul(As, Bs, *, tiles: dict | None = None, out_dtype=None,
+                   interpret: bool = True):
+    """Variable-batch GEMM: one kernel launch over ragged groups.
+
+    ``As[g] (m_g, k_g) @ Bs[g] (k_g, n_g)`` for every group in a single
+    :func:`~repro.kernels.grouped_gemm.grouped_gemm_pallas` call — each
+    group padded only to its tile multiples, never to the largest group
+    (the serving runtime's ragged decode/prefill batches are exactly this
+    shape class).  Returns the list of ``(m_g, n_g)`` results.
+
+    ``tiles`` overrides ``u``/``v``/``k`` of
+    :data:`~repro.kernels.grouped_gemm.GROUPED_DEFAULT_TILES` — the
+    grouped kernel's autotuner knob
+    (:func:`repro.tuning.candidates.enumerate_grouped_candidates`).
+    """
+    from repro.kernels.grouped_gemm import (
+        GROUPED_DEFAULT_TILES, grouped_gemm_pallas, pack_groups,
+    )
+
+    eff = {**GROUPED_DEFAULT_TILES, **(tiles or {})}
+    bad = set(eff) - {"u", "v", "k"}
+    if bad:
+        raise ValueError(
+            f"unknown grouped tile roles {sorted(bad)}; valid: ('u','v','k')"
+        )
+    for role, t in eff.items():
+        if not isinstance(t, int) or isinstance(t, bool) or t < 1 or t % 8:
+            raise ValueError(
+                f"grouped tile {role}={t!r} must be a positive multiple of 8 "
+                f"(TPU sublane granularity)"
+            )
+    A_flat, B_flat, descs, problems = pack_groups(As, Bs, eff)
+    mp_max = max(-(-p.m // eff["u"]) for p in problems)
+    np_max = max(-(-p.n // eff["v"]) for p in problems)
+    kp_max = max(-(-p.k // eff["k"]) for p in problems)
+    out_cols = int(B_flat.shape[1])
+    out = grouped_gemm_pallas(
+        A_flat, B_flat, descs,
+        grid_dims=(mp_max, np_max, kp_max), tiles=eff, out_cols=out_cols,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    results, row = [], 0
+    for p in problems:
+        results.append(out[row:row + p.m, :p.n])
+        row += -(-p.m // eff["u"]) * eff["u"]
+    return results
 
 
 def execute_plan(plan: Plan, A, B, *, out_dtype=None, interpret: bool = True,

@@ -1,7 +1,12 @@
-"""Serving launcher: batched requests through the continuous-batching engine.
+"""Serving launcher: batched requests through the continuous-batching runtime.
 
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --smoke \
         --requests 8 --max-new 16
+
+By default requests run through :class:`repro.runtime.engine.ServingRuntime`
+(chunked prefill + bucketed decode + metrics); ``--legacy`` serves through
+the old fixed-slot :class:`~repro.serving.engine.ServeEngine` wrapper
+instead (the token-identical oracle).
 
 Sharded serving over a device mesh (simulate the devices on CPU by
 exporting ``XLA_FLAGS=--xla_force_host_platform_device_count=8``):
@@ -22,6 +27,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh, parse_mesh_shape
 from repro.models.transformer import Model
+from repro.runtime.engine import ServingRuntime
 from repro.serving.engine import Request, ServeEngine
 
 
@@ -33,6 +39,12 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--chunk", type=int, default=64,
+                    help="max prefill chunk (power-of-two lattice below it); "
+                         "auto-disabled for SSM/hybrid archs")
+    ap.add_argument("--legacy", action="store_true",
+                    help="serve through the old fixed-slot ServeEngine "
+                         "(whole-prompt prefill, full-slot decode)")
     ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
                     help="serve sharded over a data×model host mesh, e.g. "
                          "'2x4' (needs that many devices; simulate on CPU "
@@ -57,14 +69,23 @@ def main():
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     t0 = time.perf_counter()
-    engine = ServeEngine(
-        cfg, params, slots=args.slots, max_len=args.max_len,
-        pretune=args.pretune, tuning_cache=args.tuning_cache, mesh=mesh,
-    )
+    if args.legacy:
+        engine = ServeEngine(
+            cfg, params, slots=args.slots, max_len=args.max_len,
+            pretune=args.pretune, tuning_cache=args.tuning_cache, mesh=mesh,
+        )
+        runtime = engine.runtime
+    else:
+        engine = runtime = ServingRuntime(
+            cfg, params, slots=args.slots, max_len=args.max_len,
+            prefill_chunk=args.chunk,
+            pretune=args.pretune, tuning_cache=args.tuning_cache, mesh=mesh,
+        )
+        print(f"runtime buckets: {runtime.lattice.describe()}")
     if args.pretune:
-        print(f"pretune: {engine.pretune_stats} "
+        print(f"pretune: {runtime.pretune_stats} "
               f"({time.perf_counter() - t0:.1f}s, "
-              f"dispatcher {engine.tuner.stats})")
+              f"dispatcher {runtime.tuner.stats})")
 
     rng = np.random.default_rng(0)
     reqs = [
@@ -81,6 +102,11 @@ def main():
     total_tokens = sum(len(r.output) for r in reqs)
     print(f"served {len(reqs)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)")
+    snap = runtime.metrics.snapshot(runtime.buckets)
+    print("metrics: " + ", ".join(
+        f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
+        for k, v in snap.items()
+    ))
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[:8]={r.prompt[:8].tolist()} -> {r.output}")
 

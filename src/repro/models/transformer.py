@@ -194,9 +194,15 @@ def prefill(cfg: ModelConfig, params, batch, cache):
 
     Returns (last_logits (B, V), new_cache).  Only the last position hits
     the LM head — at 32k prompts the full-seq logits tensor must never be
-    materialized."""
+    materialized.
+
+    Positions continue from ``cache["length"]``, so a prompt may be
+    prefilled in chunks (the runtime's chunked prefill): each chunk sees
+    its absolute positions for RoPE and the causal mask attends the
+    cached prefix.  A fresh cache has length 0 — identical to the old
+    ``arange`` behavior."""
     x = _embed_inputs(cfg, params, batch)
-    positions = jnp.arange(x.shape[1])
+    positions = cache["length"] + jnp.arange(x.shape[1])
     x, new_cache, _ = _run_stack(cfg, params, x, positions, cache=cache)
     return _lm_head(cfg, params, x[:, -1:])[:, -1], new_cache
 

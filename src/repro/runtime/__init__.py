@@ -1,0 +1,40 @@
+"""Continuous-batching serving runtime.
+
+The step-locked, fixed-slot loop of :mod:`repro.serving.engine` decodes
+every slot every step and compiles a fresh prefill executable per
+distinct prompt length — fine for a demo, fatal under real traffic with
+ragged prompts and fluctuating occupancy.  This package is the serving
+layer the ROADMAP's north star asks for:
+
+* :mod:`repro.runtime.scheduler` — request queue, prefill/decode
+  interleaving with chunked prefill, slot eviction, per-request
+  sampling state;
+* :mod:`repro.runtime.buckets` — the live ``(active-slots,
+  chunk-length)`` shapes snap onto a small bucket lattice, each bucket
+  compiled once (through :func:`repro.core.program.compile_program`
+  underneath every traced ``xeinsum``) and cached with the
+  tuning-cache fingerprint folded into its key;
+* :mod:`repro.runtime.engine` — :class:`ServingRuntime`, the tick loop
+  driving scheduler → buckets → kernels;
+* :mod:`repro.runtime.metrics` — throughput, p50/p99 latency,
+  slot-utilization and bucket-hit-rate counters.
+
+:class:`repro.serving.engine.ServeEngine` is now a thin wrapper running
+this runtime in its legacy configuration (no chunking, full-slot
+decode), kept token-identical as the correctness oracle.
+"""
+
+from repro.runtime.buckets import BucketLattice, BucketTable
+from repro.runtime.engine import ServingRuntime
+from repro.runtime.metrics import ServingMetrics
+from repro.runtime.scheduler import Request, RequestState, Scheduler
+
+__all__ = [
+    "BucketLattice",
+    "BucketTable",
+    "Request",
+    "RequestState",
+    "Scheduler",
+    "ServingMetrics",
+    "ServingRuntime",
+]

@@ -1,0 +1,137 @@
+"""Serving metrics: the counters the runtime is steered and judged by.
+
+Everything is plain host-side bookkeeping — no device sync beyond what
+the engine already does to sample tokens — so the collector can run in
+the hot loop.  ``clock`` is injectable for deterministic tests.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+__all__ = ["ServingMetrics"]
+
+
+def _pct(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+class ServingMetrics:
+    """Throughput / latency / utilization counters for one runtime.
+
+    Latency accounting is per request: ``submit → first token`` (TTFT)
+    and ``submit → completion``; percentiles are computed over completed
+    requests at :meth:`snapshot` time.  Slot utilization distinguishes
+    *occupancy* (active slots / engine slots — how full the engine runs)
+    from *decode efficiency* (active slots / bucket rows — how much of
+    each launched decode batch is useful work; 1.0 for a perfectly
+    snapped bucket).
+    """
+
+    def __init__(self, slots: int, clock=time.perf_counter):
+        self.slots = int(slots)
+        self.clock = clock
+        self.reset()
+
+    def reset(self) -> None:
+        self.tokens_out = 0
+        self.prefill_tokens = 0
+        self.prefill_chunks = 0
+        self.decode_calls = 0
+        self.ticks = 0
+        self.evictions = 0
+        self._active_rows = 0      # Σ active slots over decode calls
+        self._bucket_rows = 0      # Σ bucket rows over decode calls
+        self._occupancy = 0.0      # Σ (active / slots) over ticks
+        self._submit: dict[int, float] = {}
+        self._first: dict[int, float] = {}
+        self._ttft: list[float] = []
+        self._latency: list[float] = []
+        self._t0: float | None = None
+        self._wall = 0.0
+
+    # ------------------------------------------------------------ serve span
+    def start(self) -> None:
+        if self._t0 is None:
+            self._t0 = self.clock()
+
+    def stop(self) -> None:
+        if self._t0 is not None:
+            self._wall += self.clock() - self._t0
+            self._t0 = None
+
+    # ------------------------------------------------------- request events
+    def on_submit(self, rid: int) -> None:
+        self._submit[rid] = self.clock()
+
+    def on_first_token(self, rid: int) -> None:
+        t = self.clock()
+        self._first[rid] = t
+        if rid in self._submit:
+            self._ttft.append(t - self._submit[rid])
+        self.tokens_out += 1
+
+    def on_token(self, n: int = 1) -> None:
+        self.tokens_out += n
+
+    def on_finish(self, rid: int) -> None:
+        t = self.clock()
+        if rid in self._submit:
+            self._latency.append(t - self._submit.pop(rid))
+        self._first.pop(rid, None)
+
+    def on_evict(self, rid: int) -> None:
+        self.evictions += 1
+        self._submit.pop(rid, None)
+        self._first.pop(rid, None)
+
+    def on_unfinished(self, rid: int) -> None:
+        """Drop a request that ended without completing (max_steps
+        exhaustion): no latency sample, no leaked submit timestamp."""
+        self._submit.pop(rid, None)
+        self._first.pop(rid, None)
+
+    # --------------------------------------------------------- batch events
+    def on_prefill_chunk(self, n_tokens: int) -> None:
+        self.prefill_chunks += 1
+        self.prefill_tokens += int(n_tokens)
+
+    def on_decode(self, n_active: int, bucket_rows: int) -> None:
+        self.decode_calls += 1
+        self._active_rows += int(n_active)
+        self._bucket_rows += int(bucket_rows)
+
+    def on_tick(self, n_active: int) -> None:
+        self.ticks += 1
+        self._occupancy += n_active / self.slots
+
+    # -------------------------------------------------------------- summary
+    def snapshot(self, bucket_table=None) -> dict:
+        """All counters as one flat dict (JSON-ready floats/ints)."""
+        wall = self._wall + (self.clock() - self._t0 if self._t0 is not None
+                             else 0.0)
+        out = {
+            "tokens_out": self.tokens_out,
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_chunks": self.prefill_chunks,
+            "decode_calls": self.decode_calls,
+            "ticks": self.ticks,
+            "evictions": self.evictions,
+            "requests_done": len(self._latency),
+            "wall_s": wall,
+            "throughput_tok_s": self.tokens_out / wall if wall > 0 else 0.0,
+            "p50_latency_s": _pct(self._latency, 50),
+            "p99_latency_s": _pct(self._latency, 99),
+            "p50_ttft_s": _pct(self._ttft, 50),
+            "p99_ttft_s": _pct(self._ttft, 99),
+            "slot_occupancy": self._occupancy / self.ticks if self.ticks else 0.0,
+            "decode_efficiency": (
+                self._active_rows / self._bucket_rows if self._bucket_rows
+                else 0.0
+            ),
+        }
+        if bucket_table is not None:
+            out.update(bucket_table.stats())
+        return out

@@ -1,58 +1,35 @@
-"""Batched serving engine: continuous-batching prefill/decode.
+"""Fixed-slot serving engine — now a thin wrapper over the runtime.
 
-The engine owns a fixed number of *slots*.  Each slot carries its own
-cache tree (KV pages for attention layers, O(1) recurrent state for SSM
-layers) **and its own length counter**, so requests of different prompt
-lengths decode step-locked in one vmapped ``decode_step`` — the
-slot-batched variant of continuous batching.  ``serve_step`` therefore
-matches the assignment's ``decode_*`` shapes: one new token per slot
-against that slot's cache.
+:class:`ServeEngine` keeps the original step-locked API (``admit`` /
+``step`` / ``serve``, pretune + precompile warm-ups, mesh sharding) but
+delegates everything to :class:`repro.runtime.engine.ServingRuntime`
+configured in **legacy mode**: whole-prompt prefill (no chunking) and
+full-slot decode (no bucketing).  In that configuration the runtime
+executes the exact graphs the old engine did — every slot decodes every
+step on the stacked cache, prefill compiles per distinct prompt length —
+which makes this class the token-identical correctness oracle the
+continuous-batching runtime is differential-tested against
+(``tests/test_runtime.py``) and the fixed-slot baseline
+``benchmarks/fig14_runtime.py`` measures the bucketed runtime over.
 
-With ``pretune=True`` the engine runs an autotuning warm-up before
-accepting traffic: it traces decode and prefill (at each prompt-length
-bucket in ``pretune_prompt_lens``) under
-:func:`repro.core.contract.record_contractions` to capture the model's
-*contraction working set* (every ``contract`` the forward passes issue,
-at serving shapes), then measures and caches the fastest execution mode
-for each via :class:`repro.tuning.dispatch.Dispatcher`.  Decode shapes
-are static, so the steady-state decode loop is fully covered; prefill
-cache keys include the prompt length, so prefill is covered exactly at
-the tuned buckets (other lengths fall back to the analytic plan — misses
-inside jit never trigger measurement).  Models configured with
-``contract_strategy="tuned"`` then dispatch straight to measured
-winners.
+Two old bugs are fixed in the shared runtime rather than here:
+``greedy=False`` now threads a per-request PRNG stream through *decode*
+sampling (the old ``step()`` argmaxed every token after a sampled
+first), and ``serve()`` marks requests still live at ``max_steps`` as
+``status="unfinished"`` with a ``RuntimeWarning`` instead of silently
+returning them as if complete.
 
-Independently, ``precompile=True`` (the default) compiles the model's
-contraction-*program* working set before the first request: decode and
-bucketed prefill are traced abstractly so every ``xeinsum`` the model
-issues is parsed, path-planned and lowered exactly once into the
-process program cache (:mod:`repro.core.program`); each serve-time
-request/decode step then executes the cached programs.
+Use :class:`~repro.runtime.engine.ServingRuntime` directly for real
+traffic — chunked prefill, bucketed decode and metrics are its defaults.
 """
 
 from __future__ import annotations
 
-import contextlib
-import dataclasses
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.base import ModelConfig
-from repro.models.transformer import decode_step, init_cache, prefill
+from repro.runtime.engine import ServingRuntime
+from repro.runtime.scheduler import Request
 
 __all__ = ["Request", "ServeEngine"]
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray              # (prompt_len,) int32
-    max_new_tokens: int = 16
-    # filled by the engine:
-    output: list = dataclasses.field(default_factory=list)
-    done: bool = False
 
 
 class ServeEngine:
@@ -63,221 +40,96 @@ class ServeEngine:
                  pretune_prompt_lens: tuple[int, ...] = (8, 16, 32),
                  precompile: bool = True,
                  mesh=None, sharding_rules=None):
-        """``mesh`` (a ``jax.sharding.Mesh``) serves *sharded*: params and
-        the slot-stacked decode cache are partitioned by the model zoo's
-        logical-axis rules (:mod:`repro.distributed.sharding` resolved
-        through :mod:`repro.launch.shardings`, size-aware — nondivisible
-        axes fall back to replicated), and every prefill/decode step runs
-        under the mesh + rules context so the models' ``logical``
-        annotations become real sharding constraints.  ``sharding_rules``
-        overrides the default :class:`ShardingRules` for the mesh.
-        """
-        if cfg.encoder_only:
-            raise ValueError(f"{cfg.arch_id} is encoder-only; nothing to serve")
-        self.cfg, self.params = cfg, params
-        self.slots = slots
-        self.max_len = max_len
-        self.greedy = greedy
-        self.mesh = mesh
-        self._rules = None
-        if mesh is not None:
-            from repro.distributed.sharding import ShardingRules
-            from repro.launch.shardings import param_logical_axes, tree_shardings
-
-            self._rules = sharding_rules or ShardingRules(mesh)
-            p_spec = jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
-            )
-            p_sh = tree_shardings(self._rules, param_logical_axes(p_spec), p_spec)
-            self.params = jax.device_put(params, p_sh)
-        # slot-stacked cache: every leaf gains a leading (slots,) axis, so
-        # each slot keeps an independent length/KV state.
-        one = init_cache(cfg, 1, max_len)
-        self.cache = jax.tree.map(
-            lambda x: jnp.zeros((slots,) + x.shape, x.dtype), one
+        """See :class:`repro.runtime.engine.ServingRuntime` for the
+        parameter semantics (``mesh`` serves sharded, ``pretune`` warms
+        the tuning cache, ``precompile`` warms the program cache)."""
+        self._rt = ServingRuntime(
+            cfg, params, slots=slots, max_len=max_len, greedy=greedy,
+            chunked_prefill=False, bucketed_decode=False,
+            pretune=pretune, tuner=tuner, tuning_cache=tuning_cache,
+            pretune_prompt_lens=pretune_prompt_lens, precompile=precompile,
+            mesh=mesh, sharding_rules=sharding_rules,
         )
-        if mesh is not None:
-            from repro.launch.shardings import cache_logical_axes, tree_shardings
 
-            c_spec = jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.cache
-            )
-            c_sh = tree_shardings(
-                self._rules, cache_logical_axes(self.cache), c_spec
-            )
-            self.cache = jax.device_put(self.cache, c_sh)
-        self.active: dict[int, Request] = {}   # slot -> request
-        self._free = list(range(slots))
-        decode_fn = jax.vmap(
-            lambda p, c, t: decode_step(cfg, p, c, t), in_axes=(None, 0, 0)
-        )
-        prefill_fn = lambda p, toks, c: prefill(cfg, p, {"tokens": toks}, c)
-        self._decode_fn, self._prefill_fn = decode_fn, prefill_fn
-        self._decode = jax.jit(decode_fn)
-        self._prefill = jax.jit(prefill_fn)
-        self._tokens = np.zeros((slots, 1, 1), np.int32)
-        self.tuner = tuner
-        self.pretune_stats: dict | None = None
-        self.program_stats: dict | None = None
-        # pretune BEFORE precompile: warming the tuning cache bumps its
-        # fingerprint, which would invalidate every tuned program (and its
-        # traced executor) precompile just built
-        if pretune:
-            self.pretune_stats = self.warmup_tuning(
-                tuner=tuner, tuning_cache=tuning_cache,
-                prompt_lens=pretune_prompt_lens,
-            )
-        if precompile:
-            self.program_stats = self.precompile_programs(
-                prompt_lens=pretune_prompt_lens
-            )
+    # ---------------------------------------------------- runtime passthrough
+    @property
+    def cfg(self):
+        return self._rt.cfg
 
-    @contextlib.contextmanager
-    def _mesh_ctx(self):
-        """Mesh + logical-sharding-rules context for model steps (no-op
-        single-device)."""
-        if self.mesh is None:
-            yield
-            return
-        from repro.distributed.sharding import use_rules
+    @property
+    def params(self):
+        return self._rt.params
 
-        with self.mesh, use_rules(self._rules):
-            yield
+    @property
+    def slots(self) -> int:
+        return self._rt.slots
+
+    @property
+    def max_len(self) -> int:
+        return self._rt.max_len
+
+    @property
+    def greedy(self) -> bool:
+        return self._rt.greedy
+
+    @property
+    def mesh(self):
+        return self._rt.mesh
+
+    @property
+    def cache(self):
+        return self._rt.cache
+
+    @property
+    def runtime(self) -> ServingRuntime:
+        return self._rt
+
+    @property
+    def tuner(self):
+        return self._rt.tuner
+
+    @property
+    def pretune_stats(self):
+        return self._rt.pretune_stats
+
+    @property
+    def program_stats(self):
+        return self._rt.program_stats
+
+    @property
+    def active(self) -> dict:
+        """slot -> live :class:`Request` (the old engine's view)."""
+        return {
+            slot: state.request
+            for slot, state in self._rt.scheduler.active.items()
+        }
 
     # ----------------------------------------------------------- autotuning
-    def _trace_working_set(self, recorder, prompt_lens) -> list:
-        """Abstractly trace decode + bucketed prefills under ``recorder``
-        (a context manager yielding a list — ``record_contractions`` or
-        ``record_programs``) and return the recording.
-
-        ``jax.eval_shape`` runs no FLOPs, so this is cheap even for large
-        models; decode shapes are prompt-independent, prefill shapes carry
-        the prompt length (one trace per bucket).  The traces go through
-        fresh lambda wrappers: eval_shape caches jaxprs by function
-        identity, and a cached trace would bypass the model code the
-        recorder needs to observe.
-        """
-        one = init_cache(self.cfg, 1, self.max_len)
-        step = jnp.zeros((self.slots, 1, 1), jnp.int32)
-        decode = lambda p, c, t: self._decode_fn(p, c, t)  # noqa: E731
-        prefill = lambda p, t, c: self._prefill_fn(p, t, c)  # noqa: E731
-        with self._mesh_ctx(), recorder() as rec:
-            jax.eval_shape(decode, self.params, self.cache, step)
-            for plen in dict.fromkeys(min(p, self.max_len) for p in prompt_lens):
-                toks = jnp.zeros((1, plen), jnp.int32)
-                jax.eval_shape(prefill, self.params, toks, one)
-        return rec
-
     def contraction_working_set(
         self, prompt_lens: tuple[int, ...] = (8, 16, 32)
     ) -> list[tuple]:
-        """The ``(spec, dims, dtype)`` set of decode + bucketed prefills
-        (see :meth:`_trace_working_set`)."""
-        from repro.core.contract import record_contractions
-
-        return self._trace_working_set(record_contractions, prompt_lens)
+        return self._rt.contraction_working_set(prompt_lens)
 
     def precompile_programs(
         self, prompt_lens: tuple[int, ...] = (8, 16, 32)
     ) -> dict:
-        """Compile the model's contraction-*program* working set up front.
+        return self._rt.precompile_programs(prompt_lens)
 
-        Traces decode and each prefill bucket abstractly
-        (``jax.eval_shape`` — no FLOPs run) under
-        :func:`repro.core.program.record_programs`, so every ``xeinsum``
-        the forward passes issue lands in the process program cache:
-        parsed, path-planned, pass-pipelined and lowered exactly once.
-        The serve-time jits then re-trace against warm programs and every
-        request/decode step executes the cached executables.  Returns
-        ``{"programs": unique, "calls": recorded, "steps": total}``.
-        """
-        from repro.core.program import record_programs
+    def warmup_tuning(self, **kw) -> dict:
+        return self._rt.warmup_tuning(**kw)
 
-        rec = self._trace_working_set(record_programs, prompt_lens)
-        unique = {p.signature for p in rec}
-        return {
-            "programs": len(unique),
-            "calls": len(rec),
-            "steps": sum(len(p.program.steps) for p in rec),
-        }
-
-    def warmup_tuning(self, *, tuner=None, tuning_cache=None,
-                      prompt_lens: tuple[int, ...] = (8, 16, 32)) -> dict:
-        """Pre-tune the model's contraction working set before serving.
-
-        Measures (and persists, when the dispatcher's cache has a path)
-        the fastest execution mode for every distinct contraction the
-        model issues at serving shapes.  Returns the pretune stats dict;
-        the dispatcher is kept on ``self.tuner``.
-        """
-        if tuner is None:
-            from repro.tuning.dispatch import Dispatcher, get_dispatcher
-
-            tuner = (
-                Dispatcher(tuning_cache) if tuning_cache is not None
-                else get_dispatcher()
-            )
-        self.tuner = tuner
-        return tuner.pretune(self.contraction_working_set(prompt_lens))
-
-    # ------------------------------------------------------------- admit
+    # ------------------------------------------------------------- serving
     def admit(self, req: Request) -> bool:
         """Prefill a request into a free slot.  Returns False if full."""
-        if not self._free:
-            return False
-        slot = self._free.pop()
-        one = init_cache(self.cfg, 1, self.max_len)
-        with self._mesh_ctx():
-            logits, one = self._prefill(
-                self.params, jnp.asarray(req.prompt[None]), one
-            )
-            self.cache = _write_slot(self.cache, one, slot)
-        first = int(jnp.argmax(logits[0])) if self.greedy else int(
-            jax.random.categorical(jax.random.PRNGKey(req.rid), logits[0])
-        )
-        req.output.append(first)
-        self._tokens[slot, 0, 0] = first
-        self.active[slot] = req
-        return True
+        return self._rt.admit_now(req)
 
-    # -------------------------------------------------------------- step
-    def step(self):
+    def step(self) -> None:
         """One step-locked decode across all active slots."""
-        if not self.active:
-            return
-        with self._mesh_ctx():
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(self._tokens)
-            )
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))  # (slots,)
-        for slot, req in list(self.active.items()):
-            tok = int(nxt[slot])
-            req.output.append(tok)
-            self._tokens[slot, 0, 0] = tok
-            if len(req.output) >= req.max_new_tokens:
-                req.done = True
-                del self.active[slot]
-                self._free.append(slot)
+        if self._rt.scheduler.n_active:
+            self._rt.tick()
 
     def serve(self, requests: list[Request], max_steps: int = 10_000):
-        """Run to completion with continuous batching."""
-        pending = list(requests)
-        steps = 0
-        while (pending or self.active) and steps < max_steps:
-            while pending and self._free:
-                self.admit(pending.pop(0))
-            self.step()
-            steps += 1
-        return requests
-
-
-def _write_slot(cache, one, slot: int):
-    """Copy a batch-1 cache tree into slot ``slot`` of the stacked cache."""
-
-    def write(dst, src):
-        src = src.astype(dst.dtype)[None]
-        return jax.lax.dynamic_update_slice(
-            dst, src, (slot,) + (0,) * (dst.ndim - 1)
-        )
-
-    return jax.tree.map(write, cache, one)
+        """Run to completion with continuous batching (see
+        :meth:`repro.runtime.engine.ServingRuntime.serve` for the
+        ``max_steps`` exhaustion semantics)."""
+        return self._rt.serve(requests, max_steps=max_steps)

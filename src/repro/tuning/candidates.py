@@ -27,11 +27,14 @@ from repro.kernels.sb_gemm import DEFAULT_TILES
 __all__ = [
     "Candidate",
     "enumerate_candidates",
+    "enumerate_grouped_candidates",
     "validate_tiles",
     "estimate_vmem_bytes",
+    "estimate_grouped_vmem_bytes",
     "VMEM_BUDGET_BYTES",
     "PALLAS_TILE_GRID",
     "EXT_BRICK_GRID",
+    "GROUPED_TILE_GRID",
 ]
 
 #: per-candidate VMEM budget for the (A, B, C, f32 accumulator) blocks.
@@ -54,6 +57,19 @@ PALLAS_TILE_GRID = (
 #: brick depths tried for exceptional plans (the extended-transpose 3D
 #: tile of the stride-1-batched operand, paper §III-E).
 EXT_BRICK_GRID = (4, EXT_BATCH_TILE, 16)
+
+#: tile grid for the grouped (variable-batch) kernel: overrides merged
+#: over :data:`~repro.kernels.grouped_gemm.GROUPED_DEFAULT_TILES`.  The
+#: ``u`` axis stays small (ragged groups pad per-group to ``u``), the
+#: lane axis ``v`` and reduction ``k`` trade VMEM residency for reload
+#: traffic exactly as in :data:`PALLAS_TILE_GRID`.
+GROUPED_TILE_GRID = (
+    {},                         # GROUPED_DEFAULT_TILES: u=8, v=128, k=128
+    {"u": 16},
+    {"u": 32, "k": 64},
+    {"v": 256},
+    {"k": 256},
+)
 
 _ROLE_NAMES = ("u", "v", "k", "b")
 
@@ -166,6 +182,60 @@ def _effective_tiles(plan: Plan, roles: dict, tiles: dict) -> tuple:
             continue  # nested batch mode: vmapped outside the kernel
         out[r] = min(tiles[r], padded_dim(plan.fdims[m], tiles[r]))
     return tuple(sorted(out.items()))
+
+
+def estimate_grouped_vmem_bytes(tiles: dict, dtype) -> int:
+    """VMEM bytes for one grid step of the grouped kernel under ``tiles``.
+
+    One step stages an A tile ``(u, k)``, a B tile ``(k, v)``, the C tile
+    ``(u, v)`` in the operand dtype plus the f32 accumulator scratch —
+    the grouped analogue of :func:`estimate_vmem_bytes` (no batch brick:
+    the group axis walks whole problems, not tiles).
+    """
+    from repro.kernels.grouped_gemm import GROUPED_DEFAULT_TILES
+
+    full = {**GROUPED_DEFAULT_TILES, **tiles}
+    u, v, k = full["u"], full["v"], full["k"]
+    itemsize = jnp.dtype(dtype).itemsize
+    return (u * k + k * v + u * v) * itemsize + u * v * 4
+
+
+def enumerate_grouped_candidates(
+    problems,
+    *,
+    dtype=jnp.float32,
+) -> list[Candidate]:
+    """Legal tile configs for one grouped-GEMM call over ``problems``.
+
+    ``problems`` is the per-group shape list — ``(m, n, k)`` tuples or
+    :class:`~repro.kernels.grouped_gemm.GroupProblem` records; only its
+    non-emptiness matters here, because unlike the sb_gemm BlockSpecs
+    the grouped kernel never clamps a tile to the dims — every group
+    pads *up* to the full tile, so every distinct ``(u, v, k)`` is a
+    genuinely different kernel whatever the shapes.  Each config from
+    :data:`GROUPED_TILE_GRID` that fits the VMEM budget becomes a
+    ``Candidate("grouped", "pallas", tiles)``; the per-group ``jnp.dot``
+    loop rides along as the unfused XLA baseline
+    (``Candidate("grouped", "xla")``).
+    """
+    from repro.kernels.grouped_gemm import GROUPED_DEFAULT_TILES
+
+    if not problems:
+        raise ValueError("need at least one group")
+
+    out = [Candidate("grouped", "xla")]
+    seen: set[tuple] = set()
+    for cfg in GROUPED_TILE_GRID:
+        tiles = {**GROUPED_DEFAULT_TILES, **cfg}
+        # dedup on the merged config only (see docstring: no clamping)
+        eff = (tiles["u"], tiles["v"], tiles["k"])
+        if eff in seen:
+            continue
+        seen.add(eff)
+        if estimate_grouped_vmem_bytes(tiles, dtype) > VMEM_BUDGET_BYTES:
+            continue
+        out.append(Candidate("grouped", "pallas", tuple(sorted(cfg.items()))))
+    return out
 
 
 def default_backends() -> tuple[str, ...]:

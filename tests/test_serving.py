@@ -68,6 +68,81 @@ def test_engine_rejects_encoder_only(served):
         ServeEngine(cfg, {}, slots=1, max_len=8)
 
 
+def test_admission_when_full(served):
+    """admit() returns False with every slot busy; the request is not
+    lost — serve()'s queue picks it up once a slot frees."""
+    cfg, m, params = served
+    eng = ServeEngine(cfg, params, slots=2, max_len=64)
+    reqs = [
+        Request(rid=i, prompt=np.array([i + 1, i + 2], np.int32),
+                max_new_tokens=3)
+        for i in range(3)
+    ]
+    assert eng.admit(reqs[0]) and eng.admit(reqs[1])
+    assert not eng.admit(reqs[2])              # full: rejected, unchanged
+    assert reqs[2].output == [] and reqs[2].status == "queued"
+    while eng.active:
+        eng.step()
+    assert eng.admit(reqs[2])                  # slots free again
+    while eng.active:
+        eng.step()
+    assert all(r.done and len(r.output) == 3 for r in reqs)
+
+
+def test_slot_reuse_after_eviction(served):
+    """An evicted request frees its slot mid-flight; the next request
+    reuses it and still matches its solo greedy run."""
+    cfg, m, params = served
+    p_a = np.array([5, 6, 7], np.int32)
+    p_b = np.array([9, 8], np.int32)
+
+    solo = ServeEngine(cfg, params, slots=1, max_len=64)
+    (want,) = solo.serve([Request(rid=1, prompt=p_b, max_new_tokens=4)])
+
+    eng = ServeEngine(cfg, params, slots=1, max_len=64)
+    victim = Request(rid=0, prompt=p_a, max_new_tokens=50)
+    assert eng.admit(victim)
+    eng.step()
+    eng.runtime.evict(0)
+    assert victim.status == "evicted" and not victim.done
+    assert not eng.active
+    later = Request(rid=1, prompt=p_b, max_new_tokens=4)
+    (got,) = eng.serve([later])
+    assert got.done and got.output == want.output
+
+
+def test_max_steps_exhaustion_marks_unfinished(served):
+    """serve() hitting max_steps warns and marks the leftovers instead
+    of returning them as if complete."""
+    cfg, m, params = served
+    eng = ServeEngine(cfg, params, slots=1, max_len=64)
+    reqs = [
+        Request(rid=0, prompt=np.array([1, 2], np.int32), max_new_tokens=30),
+        Request(rid=1, prompt=np.array([3], np.int32), max_new_tokens=30),
+    ]
+    with pytest.warns(RuntimeWarning, match="max_steps=3"):
+        eng.serve(reqs, max_steps=3)
+    assert all(not r.done and r.status == "unfinished" for r in reqs)
+    assert 0 < len(reqs[0].output) < 30        # partial progress kept
+    assert reqs[1].output == []                # never admitted
+
+
+def test_nongreedy_decode_actually_samples(served):
+    """greedy=False threads per-request PRNG state through *decode* (the
+    old engine argmaxed every token after the first)."""
+    cfg, m, params = served
+    prompt = np.array([3, 14, 15, 92], np.int32)
+
+    def run(greedy):
+        eng = ServeEngine(cfg, params, slots=1, max_len=64, greedy=greedy)
+        (r,) = eng.serve([Request(rid=0, prompt=prompt, max_new_tokens=8)])
+        return r.output
+
+    sampled = run(False)
+    assert sampled == run(False)               # reproducible stream
+    assert sampled != run(True)                # and not argmax in disguise
+
+
 def test_hybrid_arch_serving():
     """Jamba: attention KV pages + mamba recurrent state in the same engine."""
     cfg = get_config("jamba-v0.1-52b", smoke=True).with_(n_periods=1)

@@ -16,6 +16,13 @@ single entry point for pairwise tensor contractions.  Strategies:
                     form, one flat GEMM, materialized permute back.  Copies
                     are pinned with ``lax.optimization_barrier`` so XLA
                     cannot elide what the paper's baseline pays for.
+* ``"native"``    — the layout-oblivious Pallas kernel
+                    (:func:`repro.kernels.ops.execute_native`): block-
+                    scatter-style per-mode addressing lowers *any* mode
+                    ordering — including the exceptional and degenerate
+                    layouts — to a single kernel with no pre-permute or
+                    copy.  Implies the Pallas backend (``backend`` is
+                    ignored, as with ``"tuned"``).
 * ``"tuned"``     — empirical dispatch through the autotuner
                     (:mod:`repro.tuning.dispatch`): run the measured
                     winner when the persistent cache has one, measure on
@@ -23,17 +30,19 @@ single entry point for pairwise tensor contractions.  Strategies:
                     analytic ``"auto"`` plan otherwise.
 
 Backends: ``"xla"`` (dot_general / vmap composition) or ``"pallas"``
-(the StridedBatchedGEMM / extended-transpose TPU kernels).  With
+(the StridedBatchedGEMM family of TPU kernels).  With
 ``backend="pallas"``, ``tiles={"u"|"v"|"k"|"b": int}`` overrides the
 kernel tile sizes per call (validated; see
-:func:`repro.tuning.candidates.validate_tiles`).
+:func:`repro.tuning.candidates.validate_tiles`, and
+:func:`~repro.tuning.candidates.validate_native_tiles` for
+``strategy="native"``, whose working set is accounted per mode).
 """
 
 from __future__ import annotations
 
 import contextlib
 import functools
-from typing import Literal
+from typing import Literal, get_args
 
 import jax
 import jax.numpy as jnp
@@ -50,8 +59,13 @@ __all__ = [
     "count_hlo_ops",
 ]
 
-Strategy = Literal["auto", "flatten", "batched", "direct", "conventional", "tuned"]
+Strategy = Literal[
+    "auto", "flatten", "batched", "direct", "conventional", "native", "tuned"
+]
 Backend = Literal["xla", "pallas"]
+#: runtime mirror of ``Strategy`` — anything else raises ValueError (a
+#: typo used to fall through silently to the batched plan).
+STRATEGIES = get_args(Strategy)
 
 
 # --------------------------------------------------------------------------
@@ -127,21 +141,24 @@ def contract(
         operands; no traces, no ellipses; every free mode must appear in
         the output.
       A, B: the operand arrays, ranks matching the spec.
-      strategy: one of the six strategies in the module docstring
+      strategy: one of the seven strategies in the module docstring
         (``"auto"``, ``"flatten"``, ``"batched"``, ``"direct"``,
-        ``"conventional"``, ``"tuned"``).  ``"flatten"`` raises
-        ``ValueError`` if the spec admits no flattened single-GEMM
-        evaluation; ``"tuned"`` dispatches through the autotuner and
-        ignores ``backend`` (the measured winner carries its own).
+        ``"conventional"``, ``"native"``, ``"tuned"``).  ``"flatten"``
+        raises ``ValueError`` if the spec admits no flattened single-GEMM
+        evaluation; ``"native"`` always runs the layout-oblivious Pallas
+        kernel; ``"tuned"`` dispatches through the autotuner.  Both
+        ignore ``backend`` (the winner/kernel carries its own).
       backend: ``"xla"`` (dot_general/vmap composition) or ``"pallas"``
-        (StridedBatchedGEMM / extended-transpose kernels; interpret mode
-        off-TPU).  Ignored by ``"direct"`` and ``"conventional"``.
+        (the StridedBatchedGEMM kernel family; interpret mode off-TPU).
+        Ignored by ``"direct"``, ``"conventional"``, ``"native"`` and
+        ``"tuned"``.
       force_batch: pin the strided-batch mode (benchmark use — Fig. 5/6
         compare batching the last vs. the middle output mode).
       tiles: per-call Pallas tile overrides (role → size for
         ``u``/``v``/``k``/``b``), validated against divisibility and the
-        VMEM budget; only legal with ``backend="pallas"`` and a planning
-        strategy (``"auto"``/``"flatten"``/``"batched"``).
+        VMEM budget; only legal with ``strategy="native"`` or with
+        ``backend="pallas"`` and a planning strategy
+        (``"auto"``/``"flatten"``/``"batched"``).
       preferred_element_type: accumulator dtype passed to ``dot_general``.
       out_dtype: result dtype; defaults to the promoted operand dtype.
       mesh: a ``jax.sharding.Mesh`` — execute *sharded*: every device
@@ -156,6 +173,12 @@ def contract(
     Returns:
       The contracted array with modes ordered as ``spec``'s output.
     """
+    if strategy not in STRATEGIES:
+        raise ValueError(
+            f"unknown strategy {strategy!r}; expected one of {STRATEGIES}")
+    if backend not in ("xla", "pallas"):
+        raise ValueError(
+            f"unknown backend {backend!r}; expected 'xla' or 'pallas'")
     cs = parse_spec(spec) if isinstance(spec, str) else spec
     dims = infer_dims(cs, A, B)
     out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
@@ -188,6 +211,15 @@ def contract(
             cs, A, B,
             preferred_element_type=preferred_element_type, out_dtype=out_dtype,
         )
+
+    if strategy == "native":
+        from repro.kernels import ops  # deferred: keeps core importable sans pallas
+
+        if tiles is not None:
+            from repro.tuning.candidates import validate_native_tiles  # no cycle
+
+            validate_native_tiles(cs, dims, tiles, dtype=jnp.result_type(A.dtype, B.dtype))
+        return ops.execute_native(cs, A, B, tiles=tiles, out_dtype=out_dtype)
 
     if tiles is not None:
         if strategy not in ("auto", "flatten", "batched"):

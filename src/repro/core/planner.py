@@ -53,6 +53,11 @@ class Plan:
     #: outer nested batch modes, outermost first ('' if none)
     nested: str
     notes: str = ""
+    #: copy/permute decision of the chosen executor path ('' = no data
+    #: movement anywhere).  Exceptional plans always set this, so a test
+    #: failure's plan repr shows whether a pre-permute was inserted —
+    #: previously the plan printed identically either way.
+    copies: str = ""
 
     @property
     def batch_modes(self) -> str:
@@ -68,6 +73,8 @@ class Plan:
             parts.append(f"nested={self.nested}")
         if self.notes:
             parts.append(self.notes)
+        if self.copies:
+            parts.append(f"copies={self.copies}")
         return " ".join(parts)
 
 
@@ -339,6 +346,26 @@ def _plan_local(
     )
 
 
+def _direct_copies(cs: ContractionSpec) -> str:
+    """Copy decision of the XLA direct executor for ``cs``.
+
+    ``_direct`` emits one ``dot_general`` whose output mode order is
+    ``batch + a_free + b_free``; when that differs from the requested
+    output a (lazy) permute is appended.  Degenerate exceptional plans
+    execute through ``_direct`` on the XLA backend, so their plan repr
+    must say which of the two happened (the Pallas backend lowers the
+    same plan through the native-layout kernel — never a copy).
+    """
+    shared = cs.batch
+    k = set(cs.contracted) | set(shared)
+    a_free = "".join(m for m in cs.a_modes if m not in k)
+    b_free = "".join(m for m in cs.b_modes if m not in k)
+    natural = shared + a_free + b_free
+    if natural == cs.c_modes:
+        return "none"
+    return f"xla:permute[{natural}->{cs.c_modes}] pallas:none"
+
+
 def _exceptional_plan(
     cs, fspec, groups, dims, fdims, *, reason: str, degenerate: bool = False
 ) -> Plan:
@@ -372,6 +399,7 @@ def _exceptional_plan(
             flatten_groups=tuple(groups), dims=dict(dims), fdims=fdims,
             gemm_modes=(u, v, kgroup), sb_batch="", nested=nested + (u and ""),
             notes=f"exceptional(degenerate): {reason}",
+            copies=_direct_copies(cs),
         )
     # u: a free GEMM mode from the other operand (must keep that operand's
     # view a legal matrix), preferring the largest dimension.  Shared batch
@@ -391,4 +419,5 @@ def _exceptional_plan(
         flatten_groups=tuple(groups), dims=dict(dims), fdims=fdims,
         gemm_modes=(u, v, kgroup), sb_batch=beta, nested=nested,
         notes=f"exceptional: {reason}; 3d-tiled operand carries [{beta}]",
+        copies="none",
     )

@@ -11,6 +11,14 @@ native axis order — in VMEM, contracts it slice-wise on the MXU against a
 Mechanically this is :func:`repro.kernels.sb_gemm.sb_gemm_pallas` with
 ``tiles["b"] > 1`` (the brick depth); this module provides the explicitly
 named entry point and the brick-depth default used by ``ops.execute_plan``.
+
+**Demoted to a reference entry point.**  Since the tile loaders grew
+native-layout (block-scatter) addressing, the "extended transpose" is no
+longer a separate kernel: :func:`~repro.kernels.sb_gemm.native_gemm_pallas`
+handles every exceptional ordering as an ordinary per-mode tiling, and
+``contract(..., strategy="native")`` reaches it for any spec.  This
+wrapper remains as the paper-named configuration (planner-chosen β brick)
+for the §III-E benchmarks and the differential tests that pin it.
 """
 
 from __future__ import annotations

@@ -6,20 +6,34 @@ is exact for contractions), assigns mode→role for the kernel, lifts nested
 batch modes through ``jax.vmap`` (paper Listing 2's outer loops), and
 dispatches to :func:`sb_gemm_pallas` — with a 3D batch brick for the
 exceptional cases (the extended-transpose operation, see ``ext_gemm.py``).
+
+``execute_native(spec, A, B)`` is the layout-oblivious entry (the
+``"native"`` strategy): no plan, no roles, no layout precondition — the
+spec lowers directly onto :func:`native_gemm_pallas`'s per-mode grid.
+Plans with no role assignment (degenerate layouts, unfused multi-mode
+contractions) route here instead of falling back to the XLA executor,
+so the Pallas backend never permutes or copies an operand.
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
-from repro.core.notation import CaseKind
+from repro.core.notation import CaseKind, ContractionSpec, parse_spec
 from repro.core.planner import Plan
-from repro.kernels.sb_gemm import DEFAULT_TILES, sb_gemm_pallas
+from repro.kernels.addressing import native_mode_tiles, padded_extent
+from repro.kernels.sb_gemm import (
+    DEFAULT_TILES,
+    native_gemm_pallas,
+    sb_gemm_pallas,
+)
 
 __all__ = [
-    "execute_plan", "sb_contract", "plan_roles", "padded_dim",
-    "EXT_BATCH_TILE", "grouped_matmul",
+    "execute_plan", "execute_native", "sb_contract", "plan_roles",
+    "padded_dim", "EXT_BATCH_TILE", "grouped_matmul",
 ]
 
 #: brick depth for the extended-transpose kernel (paper §III-E): how many
@@ -36,7 +50,7 @@ def _pad_to(x, modes: str, targets: dict):
 
 def padded_dim(d: int, tile: int) -> int:
     """Dim after padding to a tile multiple (dims ≤ one tile stay as-is)."""
-    return d if d <= tile else -(-d // tile) * tile
+    return padded_extent(d, tile)
 
 
 _padded_dim = padded_dim  # historical alias
@@ -45,9 +59,10 @@ _padded_dim = padded_dim  # historical alias
 def plan_roles(plan: Plan) -> dict | None:
     """Mode→role (u/v/k/b) assignment for the Pallas core of ``plan``.
 
-    Returns ``None`` when the plan has no single-kernel Pallas lowering —
+    Returns ``None`` when the plan has no role-based sb_gemm lowering —
     degenerate layouts and multi-mode contractions whose k-modes could not
-    be fused into one view both fall back to the XLA executor.  Shared by
+    be fused into one view; :func:`execute_plan` routes those through the
+    layout-oblivious :func:`execute_native` instead.  Shared by
     :func:`execute_plan` and the autotuner's candidate enumeration
     (:mod:`repro.tuning.candidates`).
     """
@@ -101,8 +116,92 @@ def sb_contract(
     return out[slicer]
 
 
+def execute_native(
+    spec: str | ContractionSpec,
+    A,
+    B,
+    *,
+    tiles: dict | None = None,
+    out_dtype=None,
+    interpret: bool = True,
+):
+    """Layout-oblivious single-kernel contraction (the ``"native"`` strategy).
+
+    Pads each mode to its per-mode tile multiple
+    (:func:`~repro.kernels.addressing.native_mode_tiles` maps the
+    ``u``/``v``/``k``/``b`` role knobs onto the spec's actual modes),
+    launches :func:`~repro.kernels.sb_gemm.native_gemm_pallas` on the
+    operands exactly as given — any mode ordering, no permute, no copy —
+    and slices the padding back off.  ``tiles`` carries the same role
+    overrides as the other Pallas strategies (validated by
+    :func:`repro.tuning.candidates.validate_native_tiles` when reached
+    via ``contract``).
+
+    Scalar edges (an empty output or a rank-0 operand) have no tileable
+    block; they take the direct dot_general, which moves no data either.
+
+    Differentiable: the ``pallas_call`` itself defines no useful JVP, so
+    a custom VJP expresses each cotangent as the einsum-transpose
+    contraction — the spec's validity rules (free modes must reach the
+    output) guarantee ``(c,b)->a`` and ``(c,a)->b`` are themselves legal
+    specs, so the backward passes run the native kernel too.
+    """
+    cs = parse_spec(spec) if isinstance(spec, str) else spec
+    out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
+    tile_items = None if tiles is None else tuple(sorted(tiles.items()))
+    return _native_diff(cs, tile_items, jnp.dtype(out_dtype), interpret, A, B)
+
+
+def _execute_native_impl(cs, A, B, *, tiles, out_dtype, interpret):
+    if not cs.c_modes or not cs.a_modes or not cs.b_modes:
+        from repro.core.contract import _direct
+
+        return _direct(cs, A, B, jnp.float32).astype(out_dtype)
+    dims: dict = {}
+    for modes, x in ((cs.a_modes, A), (cs.b_modes, B)):
+        for m, d in zip(modes, x.shape):
+            dims[m] = d
+    mode_tiles = native_mode_tiles(cs.a_modes, cs.b_modes, cs.c_modes, dims, tiles)
+    targets = {m: padded_dim(d, mode_tiles[m]) for m, d in dims.items()}
+    A = _pad_to(A, cs.a_modes, targets)
+    B = _pad_to(B, cs.b_modes, targets)
+    out = native_gemm_pallas(
+        A, B, a_modes=cs.a_modes, b_modes=cs.b_modes, c_modes=cs.c_modes,
+        mode_tiles=mode_tiles, out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[tuple(slice(0, dims[m]) for m in cs.c_modes)]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _native_diff(cs, tile_items, out_dtype, interpret, A, B):
+    tiles = None if tile_items is None else dict(tile_items)
+    return _execute_native_impl(
+        cs, A, B, tiles=tiles, out_dtype=out_dtype, interpret=interpret)
+
+
+def _native_diff_fwd(cs, tile_items, out_dtype, interpret, A, B):
+    return _native_diff(cs, tile_items, out_dtype, interpret, A, B), (A, B)
+
+
+def _native_diff_bwd(cs, tile_items, out_dtype, interpret, res, g):
+    # Einsum-transpose rule.  Forward tiles are role assignments for the
+    # forward spec's mode classes; the transposed specs reclassify, so
+    # the backward kernels take the default tile grid.
+    A, B = res
+    dA = execute_native(
+        ContractionSpec(cs.c_modes, cs.b_modes, cs.a_modes), g, B,
+        out_dtype=A.dtype, interpret=interpret)
+    dB = execute_native(
+        ContractionSpec(cs.c_modes, cs.a_modes, cs.b_modes), g, A,
+        out_dtype=B.dtype, interpret=interpret)
+    return dA, dB
+
+
+_native_diff.defvjp(_native_diff_fwd, _native_diff_bwd)
+
+
 def grouped_matmul(As, Bs, *, tiles: dict | None = None, out_dtype=None,
-                   interpret: bool = True):
+                   interpret: bool = True, trans_a=False, trans_b=False):
     """Variable-batch GEMM: one kernel launch over ragged groups.
 
     ``As[g] (m_g, k_g) @ Bs[g] (k_g, n_g)`` for every group in a single
@@ -110,6 +209,13 @@ def grouped_matmul(As, Bs, *, tiles: dict | None = None, out_dtype=None,
     group padded only to its tile multiples, never to the largest group
     (the serving runtime's ragged decode/prefill batches are exactly this
     shape class).  Returns the list of ``(m_g, n_g)`` results.
+
+    ``trans_a``/``trans_b`` (scalar or per-group sequence) flag operands
+    stored in transposed layout — ``As[g] (k_g, m_g)`` / ``Bs[g]
+    (n_g, k_g)`` — which the kernel consumes in place via its descriptor
+    table, the grouped counterpart of the native-layout tile loaders in
+    :func:`~repro.kernels.sb_gemm.native_gemm_pallas`.  Zero-size groups
+    (``m``/``n``/``k`` of 0) are legal: ``k == 0`` yields exact zeros.
 
     ``tiles`` overrides ``u``/``v``/``k`` of
     :data:`~repro.kernels.grouped_gemm.GROUPED_DEFAULT_TILES` — the
@@ -132,15 +238,19 @@ def grouped_matmul(As, Bs, *, tiles: dict | None = None, out_dtype=None,
                 f"grouped tile {role}={t!r} must be a positive multiple of 8 "
                 f"(TPU sublane granularity)"
             )
-    A_flat, B_flat, descs, problems = pack_groups(As, Bs, eff)
-    mp_max = max(-(-p.m // eff["u"]) for p in problems)
-    np_max = max(-(-p.n // eff["v"]) for p in problems)
-    kp_max = max(-(-p.k // eff["k"]) for p in problems)
-    out_cols = int(B_flat.shape[1])
+    A_flat, B_flat, descs, problems = pack_groups(
+        As, Bs, eff, trans_a=trans_a, trans_b=trans_b,
+    )
+    mp_max = max(1, max(-(-p.m // eff["u"]) for p in problems))
+    np_max = max(1, max(-(-p.n // eff["v"]) for p in problems))
+    kp_max = max(1, max(-(-p.k // eff["k"]) for p in problems))
+    out_cols = np_max * eff["v"]
+    out_rows = max(eff["u"],
+                   sum(-(-p.m // eff["u"]) * eff["u"] for p in problems))
     out = grouped_gemm_pallas(
         A_flat, B_flat, descs,
         grid_dims=(mp_max, np_max, kp_max), tiles=eff, out_cols=out_cols,
-        out_dtype=out_dtype, interpret=interpret,
+        out_rows=out_rows, out_dtype=out_dtype, interpret=interpret,
     )
     results, row = [], 0
     for p in problems:
@@ -161,24 +271,23 @@ def execute_plan(plan: Plan, A, B, *, out_dtype=None, interpret: bool = True,
     fs, fd = plan.fspec, plan.fdims
     out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
 
-    if "degenerate" in plan.notes:
-        from repro.core.contract import _direct
-
-        return _direct(plan.spec, A, B, jnp.float32).astype(out_dtype)
+    roles = plan_roles(plan)
+    if roles is None:
+        # degenerate layout or a multi-mode contraction whose k-modes could
+        # not be fused into one view — no role-based sb_gemm core exists.
+        # The native-layout kernel needs neither: every mode gets its own
+        # grid axis, so the raw spec runs as-is (no permute, no copy, no
+        # XLA fallback).
+        return execute_native(
+            plan.spec, A, B, tiles=tiles, out_dtype=out_dtype,
+            interpret=interpret,
+        )
 
     # flattening reshapes are views (adjacent modes, packed layout)
     if plan.spec.a_modes != fs.a_modes:
         A = A.reshape(tuple(fd[m] for m in fs.a_modes))
     if plan.spec.b_modes != fs.b_modes:
         B = B.reshape(tuple(fd[m] for m in fs.b_modes))
-
-    roles = plan_roles(plan)
-    if roles is None:
-        # multi-mode contraction whose k-modes could not be fused into one
-        # view — no single MXU k axis exists; fall back to the XLA executor.
-        from repro.core.contract import _execute_xla
-
-        return _execute_xla(plan, A, B, jnp.float32).astype(out_dtype)
 
     eff_tiles = dict(DEFAULT_TILES)
     if plan.kind == CaseKind.EXCEPTIONAL:

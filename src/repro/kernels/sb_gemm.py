@@ -1,26 +1,34 @@
-"""StridedBatchedGEMM as a Pallas TPU kernel.
+"""StridedBatchedGEMM as a Pallas TPU kernel — native-layout tile loads.
 
 The paper's primitive (Listing 1)::
 
     C_p = alpha * opA(A + p*loa) @ opB(B + p*lob) + beta * C_p
 
 On TPU the ``lda/loa`` stride walk becomes a ``BlockSpec.index_map`` that
-reads HBM→VMEM tiles of each operand *in its native layout* — the batch
-mode may sit on any axis of any operand (or be absent: ``lo = 0`` broadcast
-batching).  No operand is ever re-materialized; "transposed" operands are
-handled by contracting the appropriate tile axes on the MXU
-(``jnp.einsum`` on VMEM tiles → ``dot_general`` with arbitrary dimension
-numbers), which is the TPU analogue of GEMM's ``op`` flags.
+reads HBM→VMEM tiles of each operand *in its native layout*.  This module
+takes the idea to its fixed point (Matthews, arXiv:1607.00291 — the
+block-scatter GEMM): :func:`native_gemm_pallas` gives the grid **one axis
+per tensor mode** (output modes first, contracted modes innermost) and
+each operand's index map simply selects the grid coordinates of the modes
+it carries, in its own axis order (:mod:`repro.kernels.addressing`).  Any
+mode ordering — a batch mode on any axis of any operand (or absent:
+``lo = 0`` broadcast batching), "transposed" operands, the eight
+exceptional Table II cases, the degenerate shared-batch layouts, multi-
+mode contraction groups — lowers to this one kernel with no pre-permute
+or copy.  "Transposition" happens on the MXU: the tile contraction is a
+``jnp.einsum`` over VMEM tiles (→ ``dot_general`` with arbitrary
+dimension numbers), the TPU analogue of GEMM's ``op`` flags.
 
-The same kernel body covers the paper's *extended transpose* operation
-(§III-E): passing ``batch_tile > 1`` loads a 3D brick of the operand whose
-minor-most (stride-1) axis carries the batch — the paper's "3D tiling of B
-into cache" — so even the eight exceptional cases of Table II run without
-explicit transposition.  ``ext_gemm.py`` wraps that configuration.
+:func:`sb_gemm_pallas` is the role-based entry the planner drives: it
+maps the classic ``u``/``v``/``k``/``b`` role tiles onto modes and calls
+the native kernel.  The paper's *extended transpose* (§III-E) falls out
+as the configuration ``tiles["b"] > 1`` — a 3D VMEM brick of the operand
+whose stride-1 axis carries the batch ("3D tiling of B into cache") —
+see ``ext_gemm.py``.
 
-Grid: ``(batch, u_blocks, v_blocks, k_blocks)`` with k innermost; partial
-products accumulate in an f32 VMEM scratch tile and are emitted on the last
-k step (MXU-friendly: tiles padded to multiples of (8, 128) by ``ops.py``).
+Partial products accumulate in an f32 VMEM scratch tile and are emitted
+on the last contracted step (MXU-friendly: tiles padded to multiples of
+(8, 128) by ``ops.py``).
 """
 
 from __future__ import annotations
@@ -31,50 +39,126 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.addressing import (
+    DEFAULT_TILES,
+    block_index_map,
+    effective_tile,
+)
+
 try:  # TPU compiler params are optional (interpret mode does not need them)
     from jax.experimental.pallas import tpu as pltpu
 except ImportError:  # pragma: no cover
     pltpu = None
 
-__all__ = ["sb_gemm_pallas", "DEFAULT_TILES"]
-
-#: role → tile size.  u/v are the GEMM free modes (v is C's minor-most mode
-#: → lane axis: 128 wide), k the contracted mode (128 for the MXU), b the
-#: batch walk (1 = classic sb_gemm; >1 = extended-transpose 3D brick).
-DEFAULT_TILES = {"u": 128, "v": 128, "k": 128, "b": 1}
+__all__ = ["native_gemm_pallas", "sb_gemm_pallas", "DEFAULT_TILES"]
 
 
-def _kernel(a_ref, b_ref, o_ref, acc_ref, *, tile_spec: str, nk: int, out_dtype,
-            upcast: bool):
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, tile_spec: str,
+            k_axes: tuple[int, ...], out_dtype, upcast: bool):
     """One grid step: accumulate a tile contraction into VMEM scratch."""
-    kk = pl.program_id(3)
-
-    @pl.when(kk == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
     a, b = a_ref[...], b_ref[...]
     if upcast:  # interpret-on-CPU only: XLA:CPU lacks some bf16 dot thunks.
         a, b = a.astype(jnp.float32), b.astype(jnp.float32)
-    acc_ref[...] += jnp.einsum(
-        tile_spec, a, b, preferred_element_type=jnp.float32
+    part = jnp.einsum(tile_spec, a, b, preferred_element_type=jnp.float32)
+
+    if not k_axes:  # outer product: every C block is written exactly once
+        o_ref[...] = part.astype(out_dtype)
+        return
+
+    first = functools.reduce(
+        jnp.logical_and, [pl.program_id(ax) == 0 for ax in k_axes]
+    )
+    last = functools.reduce(
+        jnp.logical_and,
+        [pl.program_id(ax) == pl.num_programs(ax) - 1 for ax in k_axes],
     )
 
-    @pl.when(kk == nk - 1)
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += part
+
+    @pl.when(last)
     def _emit():
         o_ref[...] = acc_ref[...].astype(out_dtype)
 
 
-def _block(modes: str, roles: dict, tiles: dict, dims: dict):
-    """BlockSpec for an operand with the given (core) mode string."""
-    shape = tuple(min(tiles[roles[m]], dims[m]) for m in modes)
-    sel = {"b": 0, "u": 1, "v": 2, "k": 3}
+def native_gemm_pallas(
+    A,
+    B,
+    *,
+    a_modes: str,
+    b_modes: str,
+    c_modes: str,
+    mode_tiles: dict,
+    out_dtype=None,
+    interpret: bool = True,
+):
+    """Single-call contraction of ``A`` and ``B`` in their native layouts.
 
-    def index_map(b, i, j, kk, _modes=modes):
-        g = (b, i, j, kk)
-        return tuple(g[sel[roles[m]]] for m in _modes)
+    ``mode_tiles`` maps every mode to its tile edge (see
+    :func:`repro.kernels.addressing.native_mode_tiles`); tiles clamp to
+    the mode dims, which must already be padded to multiples of the
+    clamped tiles (``ops.py`` does this).  The grid is one axis per mode:
+    output modes in C order (parallel), contracted modes innermost
+    (arbitrary — they accumulate).  ``c_modes`` must be non-empty and
+    both operands must have rank ≥ 1; ``ops.execute_native`` routes the
+    scalar edge cases to the direct path instead.
 
-    return pl.BlockSpec(shape, index_map), shape
+    ``interpret=True`` runs the kernel body on CPU for validation; on
+    real TPUs pass ``interpret=False``.
+    """
+    out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
+    dims: dict = {}
+    for modes, x in ((a_modes, A), (b_modes, B)):
+        for m, d in zip(modes, x.shape):
+            dims[m] = d
+    contracted = "".join(
+        m for m in a_modes if m in b_modes and m not in c_modes
+    )
+    grid_modes = c_modes + contracted
+    eff = {m: effective_tile(dims[m], mode_tiles[m]) for m in grid_modes}
+    for m in grid_modes:
+        assert dims[m] % eff[m] == 0, (m, dims[m], eff[m])
+    grid = tuple(dims[m] // eff[m] for m in grid_modes)
+    k_axes = tuple(range(len(c_modes), len(grid_modes)))
+
+    def block(modes):
+        shape = tuple(eff[m] for m in modes)
+        return pl.BlockSpec(shape, block_index_map(modes, grid_modes)), shape
+
+    a_spec, _ = block(a_modes)
+    b_spec, _ = block(b_modes)
+    c_spec, c_block = block(c_modes)
+    out_shape = jax.ShapeDtypeStruct(tuple(dims[m] for m in c_modes), out_dtype)
+    tile_spec = f"{a_modes},{b_modes}->{c_modes}"
+
+    kwargs = {}
+    if pltpu is not None and not interpret:  # pragma: no cover (TPU only)
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=(
+                ("parallel",) * len(c_modes) + ("arbitrary",) * len(k_axes)
+            ),
+        )
+
+    scratch = (
+        pltpu.VMEM(c_block, jnp.float32)
+        if pltpu is not None
+        else jax.ShapeDtypeStruct(c_block, jnp.float32)
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, tile_spec=tile_spec, k_axes=k_axes,
+                          out_dtype=out_dtype,
+                          upcast=interpret and A.dtype != jnp.float32),
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=c_spec,
+        out_shape=out_shape,
+        scratch_shapes=[scratch],
+        interpret=interpret,
+        **kwargs,
+    )(A, B)
 
 
 def sb_gemm_pallas(
@@ -96,58 +180,17 @@ def sb_gemm_pallas(
     assigned by ``roles: {mode: role}``).  All mode dims must already be
     padded to multiples of the role tiles (``ops.py`` does this).
 
-    ``interpret=True`` runs the kernel body on CPU for validation; on real
-    TPUs pass ``interpret=False``.
+    This is the planner-facing veneer over :func:`native_gemm_pallas`:
+    the role table is just a per-mode tile assignment, and the native
+    kernel's per-mode grid subsumes the classic ``(b, u, v, k)`` one.
     """
     tiles = {**DEFAULT_TILES, **(tiles or {})}
-    out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
     dims: dict = {}
     for modes, x in ((a_modes, A), (b_modes, B)):
         for m, d in zip(modes, x.shape):
             dims[m] = d
-    kmode = next(m for m, r in roles.items() if r == "k")
-    bmode = next((m for m, r in roles.items() if r == "b"), None)
-
-    a_spec, _ = _block(a_modes, roles, tiles, dims)
-    b_spec, _ = _block(b_modes, roles, tiles, dims)
-    c_spec, c_block = _block(c_modes, roles, tiles, dims)
-
-    def blocks(mode):
-        t = min(tiles[roles[mode]], dims[mode])
-        assert dims[mode] % t == 0, (mode, dims[mode], t)
-        return dims[mode] // t
-
-    umode = next((m for m, r in roles.items() if r == "u" and m in c_modes), None)
-    vmode = next((m for m, r in roles.items() if r == "v"), None)
-    grid = (
-        blocks(bmode) if bmode else 1,
-        blocks(umode) if umode else 1,
-        blocks(vmode) if vmode else 1,
-        blocks(kmode),
+    mode_tiles = {m: tiles[roles[m]] for m in dims}
+    return native_gemm_pallas(
+        A, B, a_modes=a_modes, b_modes=b_modes, c_modes=c_modes,
+        mode_tiles=mode_tiles, out_dtype=out_dtype, interpret=interpret,
     )
-    nk = grid[3]
-    out_shape = jax.ShapeDtypeStruct(tuple(dims[m] for m in c_modes), out_dtype)
-    tile_spec = f"{a_modes},{b_modes}->{c_modes}"
-
-    kwargs = {}
-    if pltpu is not None and not interpret:  # pragma: no cover (TPU only)
-        kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
-        )
-
-    scratch = (
-        pltpu.VMEM(c_block, jnp.float32)
-        if pltpu is not None
-        else pl.BlockSpec(memory_space=None)
-    )
-    return pl.pallas_call(
-        functools.partial(_kernel, tile_spec=tile_spec, nk=nk, out_dtype=out_dtype,
-                          upcast=interpret and A.dtype != jnp.float32),
-        grid=grid,
-        in_specs=[a_spec, b_spec],
-        out_specs=c_spec,
-        out_shape=out_shape,
-        scratch_shapes=[scratch],
-        interpret=interpret,
-        **kwargs,
-    )(A, B)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.notation import CaseKind, ContractionSpec, parse_spec
 from repro.core.planner import Plan, make_plan
+from repro.kernels.addressing import effective_tile, native_mode_tiles
 from repro.kernels.ops import EXT_BATCH_TILE, padded_dim, plan_roles
 from repro.kernels.sb_gemm import DEFAULT_TILES
 
@@ -29,7 +30,9 @@ __all__ = [
     "enumerate_candidates",
     "enumerate_grouped_candidates",
     "validate_tiles",
+    "validate_native_tiles",
     "estimate_vmem_bytes",
+    "estimate_native_vmem_bytes",
     "estimate_grouped_vmem_bytes",
     "VMEM_BUDGET_BYTES",
     "PALLAS_TILE_GRID",
@@ -113,16 +116,8 @@ class Candidate:
         return cls(strategy=strategy, backend=backend, tiles=tiles)
 
 
-def validate_tiles(tiles: dict) -> None:
-    """Validate a user/tuner tile override; raises ``ValueError``.
-
-    Rules: keys must be kernel roles (``u``/``v``/``k``/``b``); values
-    positive ints; ``u``/``v``/``k`` multiples of 8 (the TPU sublane
-    granularity — non-divisible tiles force masked partial lanes the MXU
-    loader rejects); and the implied VMEM working set (A, B, C blocks plus
-    the f32 accumulator, conservatively at the requested — unclamped —
-    tile sizes) must fit :data:`VMEM_BUDGET_BYTES`.
-    """
+def _check_tile_values(tiles: dict) -> None:
+    """Shared role-name/value checks for every tile override form."""
     bad = set(tiles) - set(_ROLE_NAMES)
     if bad:
         raise ValueError(
@@ -135,6 +130,19 @@ def validate_tiles(tiles: dict) -> None:
             raise ValueError(
                 f"tile {role}={t} is not divisible by 8 (TPU sublane granularity)"
             )
+
+
+def validate_tiles(tiles: dict) -> None:
+    """Validate a user/tuner tile override; raises ``ValueError``.
+
+    Rules: keys must be kernel roles (``u``/``v``/``k``/``b``); values
+    positive ints; ``u``/``v``/``k`` multiples of 8 (the TPU sublane
+    granularity — non-divisible tiles force masked partial lanes the MXU
+    loader rejects); and the implied VMEM working set (A, B, C blocks plus
+    the f32 accumulator, conservatively at the requested — unclamped —
+    tile sizes) must fit :data:`VMEM_BUDGET_BYTES`.
+    """
+    _check_tile_values(tiles)
     full = {**DEFAULT_TILES, **tiles}
     u, v, k, b = (full[r] for r in _ROLE_NAMES)
     # worst-case blocks: A=(b,u,k), B=(b,k,v), C=(b,u,v) + f32 accumulator
@@ -170,6 +178,59 @@ def estimate_vmem_bytes(plan: Plan, roles: dict, tiles: dict, dtype) -> int:
     b = block_elems(fs.b_modes)
     c = block_elems(fs.c_modes)
     return (a + b) * itemsize + c * itemsize + c * 4
+
+
+def estimate_native_vmem_bytes(
+    spec: str | ContractionSpec, dims: dict, tiles: dict, dtype
+) -> int:
+    """VMEM bytes for one grid step of the ``"native"`` strategy.
+
+    The native kernel carries a *per-mode* tile table
+    (:func:`~repro.kernels.addressing.native_mode_tiles`), so its working
+    set is the product of every mode's clamped tile per operand block —
+    not the fixed 4-role worst case of :func:`validate_tiles`.  With
+    several batch modes a brick depth multiplies *each* block once per
+    mode, which the role formula undercounts; conversely a spec with few
+    modes can afford tiles the role formula would reject.
+    """
+    cs = parse_spec(spec) if isinstance(spec, str) else spec
+    itemsize = jnp.dtype(dtype).itemsize
+    mode_tiles = native_mode_tiles(cs.a_modes, cs.b_modes, cs.c_modes, dims, tiles)
+
+    def block_elems(modes: str) -> int:
+        n = 1
+        for m in modes:
+            n *= effective_tile(dims[m], mode_tiles[m])
+        return n
+
+    a = block_elems(cs.a_modes)
+    b = block_elems(cs.b_modes)
+    c = block_elems(cs.c_modes)
+    return (a + b) * itemsize + c * itemsize + c * 4
+
+
+def validate_native_tiles(
+    spec: str | ContractionSpec, dims: dict, tiles: dict, *, dtype=jnp.float32
+) -> None:
+    """Validate a tile override for ``strategy="native"``; raises
+    ``ValueError``.
+
+    Role names/values follow the same rules as :func:`validate_tiles`,
+    but the VMEM check accounts for the per-mode tile table the native
+    strategy carries (:func:`estimate_native_vmem_bytes`) — so oversized
+    configs are rejected at enumeration/call time, never at launch.
+    """
+    _check_tile_values(tiles)
+    cs = parse_spec(spec) if isinstance(spec, str) else spec
+    if not cs.c_modes or not cs.a_modes or not cs.b_modes:
+        return  # scalar edge: execute_native takes the direct path
+    bytes_needed = estimate_native_vmem_bytes(cs, dims, tiles, dtype)
+    if bytes_needed > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"native tiles {tiles} are oversized for {cs.spec_str()} at "
+            f"{dims}: ~{bytes_needed / 2**20:.1f} MiB of per-mode VMEM "
+            f"blocks exceeds the {VMEM_BUDGET_BYTES / 2**20:.0f} MiB budget"
+        )
 
 
 def _effective_tiles(plan: Plan, roles: dict, tiles: dict) -> tuple:
@@ -269,7 +330,11 @@ def enumerate_candidates(
     good-XLA-user reference).  Pallas candidates: each distinct plan ×
     each tile config from :data:`PALLAS_TILE_GRID` (brick depths from
     :data:`EXT_BRICK_GRID` for exceptional plans) that clamps to a unique
-    effective tiling and fits the VMEM budget.
+    effective tiling and fits the VMEM budget — plus the layout-oblivious
+    ``"native"`` strategy, whose per-mode tile table is validated with
+    :func:`validate_native_tiles` (it is legal for *every* non-scalar
+    spec, including the degenerate/multi-k plans that have no role-based
+    sb_gemm lowering).
     """
     cs = parse_spec(spec) if isinstance(spec, str) else spec
     if backends is None:
@@ -324,4 +389,23 @@ def enumerate_candidates(
                     out.append(
                         Candidate(strategy, "pallas", tuple(sorted(cfg.items())))
                     )
+
+        seen_native: set[tuple] = set()
+        for grid_cfg in PALLAS_TILE_GRID:
+            mode_tiles = native_mode_tiles(
+                cs.a_modes, cs.b_modes, cs.c_modes, dims, grid_cfg
+            )
+            eff = tuple(sorted(
+                (m, effective_tile(dims[m], t)) for m, t in mode_tiles.items()
+            ))
+            if eff in seen_native:
+                continue
+            seen_native.add(eff)
+            try:
+                # same gate as contract(strategy="native", tiles=...) — a
+                # candidate must never be rejected at execution time
+                validate_native_tiles(cs, dims, grid_cfg, dtype=dtype)
+            except ValueError:
+                continue
+            out.append(Candidate("native", "pallas", tuple(sorted(grid_cfg.items()))))
     return out

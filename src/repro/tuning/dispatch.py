@@ -122,24 +122,34 @@ class Dispatcher:
 
     # ------------------------------------------------------------------ tune
     def tune(self, spec, A, B) -> dict:
-        """Measure every legal candidate and persist the results.
+        """Measure every not-yet-measured legal candidate and persist.
 
-        Candidates are timed with interleaved sampling
+        Incremental across schema growth: when the cache already holds an
+        entry for this key (e.g. written before a new strategy existed),
+        its per-candidate timings are kept and only the *new* candidate
+        keys are timed — then the winner is re-picked over the merged
+        results.  Candidates are timed with interleaved sampling
         (:func:`~repro.tuning.measure.measure_candidates`) so machine
-        drift cannot bias the winner.  Counts one measurement per
-        candidate.  Returns the stored entry.
+        drift cannot bias the winner.  Counts one measurement per newly
+        timed candidate.  Returns the stored entry.
         """
         cs = parse_spec(spec) if isinstance(spec, str) else spec
         from repro.core.contract import infer_dims
 
         dims = infer_dims(cs, A, B)
         dtype = jnp.result_type(A.dtype, B.dtype)
+        key = canonical_key(cs, dims, dtype)
         cands = enumerate_candidates(cs, dims, dtype=dtype, backends=self.backends)
-        measured = measure_candidates(
-            cands, cs, A, B, iters=self.iters, warmup=self.warmup
+        prior = self.cache.get(key)
+        results = dict(prior["results"]) if prior else {}
+        todo = [c for c in cands if c.key() not in results]
+        measured = (
+            measure_candidates(todo, cs, A, B, iters=self.iters, warmup=self.warmup)
+            if todo
+            else {}
         )
         self.measurements += len(measured)
-        results = {k: m.us for k, m in measured.items()}
+        results.update({k: m.us for k, m in measured.items()})
         best = min(results, key=results.get)
         auto_key = Candidate("auto", "xla").key()
         if (
@@ -149,7 +159,7 @@ class Dispatcher:
         ):
             best = auto_key
         entry = {"best": best, "results": results}
-        self.cache.put(canonical_key(cs, dims, dtype), entry)
+        self.cache.put(key, entry)
         return entry
 
     # -------------------------------------------------------------- contract

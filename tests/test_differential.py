@@ -20,7 +20,14 @@ oracle across every ``contract()``/``xeinsum()`` strategy×backend:
 * sharded: when ≥8 devices are visible (``REPRO_HOST_DEVICES=8``, see
   ``conftest.py``), the same specs run through ``xeinsum(...,
   mesh=...)`` with seeded mode shardings and must match their
-  single-device result — the differential bar for the shard-aware path.
+  single-device result — the differential bar for the shard-aware path;
+* layout fuzz: 100 seeded specs from :mod:`layoutfuzz` — permuted /
+  exceptional / degenerate mode orders, size-1 extents, operands
+  arriving through strided / reversed / transposed / broadcast storage —
+  must be **bit-identical** (``np.array_equal``, not allclose; the
+  operands are integer-valued f32 so every reduction order is exact)
+  to ``jnp.einsum`` under every strategy, including the native-layout
+  Pallas kernel, which may never permute or copy to get there.
 
 No hypothesis dependency: plain ``numpy.random.default_rng`` with fixed
 seeds, so every failure is a deterministic repro.
@@ -44,6 +51,7 @@ pytestmark = pytest.mark.slow  # the fuzzer is the multi-minute tier-1 tail
 SEED = 20260801
 N_PAIRWISE = 120
 N_NARY = 80
+N_LAYOUT = 100  # layout-fuzz tier (see layoutfuzz.py)
 CHUNK = 10  # specs per pytest case: granular repro without 200 items
 PALLAS_EVERY = 5
 PROGRAM_EVERY = 2  # compiled-program slice of the seeded specs
@@ -215,6 +223,41 @@ def test_compiled_programs_match_oracle_and_eager(chunk):
             pgot, pref, atol=1e-4, rtol=1e-4,
             err_msg=f"pairwise #{i} {cs.spec_str()} via compile_program",
         )
+
+
+# --------------------------------------- layout fuzz: bit-identical tier
+@pytest.mark.parametrize("chunk", _chunks(N_LAYOUT))
+def test_layout_fuzz_bit_identical(chunk):
+    """Every strategy must be *bit-identical* to ``jnp.einsum`` on specs
+    and storage layouts drawn from :mod:`layoutfuzz` — the operands are
+    integer-valued f32, so there is no tolerance to hide a mis-addressed
+    tile behind.  ``native`` (the transpose-free Pallas kernel) runs on
+    every spec; the pallas ``auto`` route is sampled (interpret mode is
+    slow)."""
+    from layoutfuzz import gen_layout_case
+
+    for i in range(chunk * CHUNK, min((chunk + 1) * CHUNK, N_LAYOUT)):
+        cs, dims, A_np, B_np, treatments = gen_layout_case(i)
+        spec = cs.spec_str()
+        A, B = jnp.asarray(A_np), jnp.asarray(B_np)
+        ref = np.asarray(jnp.einsum(spec, A, B))
+        msg = f"spec #{i} {spec} dims={dims} layouts={treatments}"
+
+        for strategy in ("auto", "batched", "direct", "conventional",
+                         "native"):
+            got = np.asarray(contract(spec, A, B, strategy=strategy))
+            assert got.shape == ref.shape, f"{msg} strategy={strategy}"
+            assert np.array_equal(got, ref), (
+                f"{msg} strategy={strategy}: bits diverge "
+                f"(max |Δ|={np.abs(got - ref).max()})"
+            )
+        if i % PALLAS_EVERY == 0:
+            got = np.asarray(
+                contract(spec, A, B, strategy="auto", backend="pallas")
+            )
+            assert np.array_equal(got, ref), (
+                f"{msg} backend=pallas: bits diverge"
+            )
 
 
 # ------------------------------------------- sharded vs single-device

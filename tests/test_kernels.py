@@ -125,3 +125,48 @@ def test_kernel_under_jit_and_grad():
     val = loss(A, B)
     ref = jnp.sum(jnp.einsum(rm, A, B) ** 2)
     np.testing.assert_allclose(float(val), float(ref), rtol=1e-4)
+
+
+def test_native_kernel_grad_matches_einsum():
+    """The native kernel defines a custom VJP whose backward passes are
+    themselves native contractions (the einsum-transpose specs are always
+    legal because free modes must reach the output)."""
+    rng = np.random.default_rng(6)
+    specs = [
+        ("pk,mkn->nmp", (5, 7), (4, 7, 3)),   # exceptional layout
+        ("mk,kn->mn", (6, 4), (4, 5)),        # plain GEMM
+        ("k,k->", (9,), (9,)),                # scalar output (direct route)
+        ("bmk,bkn->bnm", (2, 3, 4), (2, 4, 5)),
+        ("mq,qn->qnm", (3, 4), (4, 5)),       # batch-minor output
+    ]
+    for spec, sa, sb in specs:
+        A = _rand(rng, sa, jnp.float32)
+        B = _rand(rng, sb, jnp.float32)
+        ga, gb = jax.grad(
+            lambda a, b: jnp.sum(contract(spec, a, b, strategy="native") ** 2),
+            (0, 1))(A, B)
+        ra, rb = jax.grad(
+            lambda a, b: jnp.sum(jnp.einsum(spec, a, b) ** 2), (0, 1))(A, B)
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(ra),
+                                   rtol=1e-4, atol=1e-4, err_msg=spec)
+        np.testing.assert_allclose(np.asarray(gb), np.asarray(rb),
+                                   rtol=1e-4, atol=1e-4, err_msg=spec)
+    # jit composes, and second order works (the backward is differentiable)
+    A = _rand(rng, (5, 7), jnp.float32)
+    B = _rand(rng, (4, 7, 3), jnp.float32)
+    f = lambda a: jnp.sum(contract("pk,mkn->nmp", a, B, strategy="native"))
+    r = lambda a: jnp.sum(jnp.einsum("pk,mkn->nmp", a, B))
+    np.testing.assert_allclose(np.asarray(jax.jit(jax.grad(f))(A)),
+                               np.asarray(jax.grad(r)(A)), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(jax.grad(lambda a: jnp.sum(jax.grad(f)(a) ** 2))(A)),
+        np.asarray(jax.grad(lambda a: jnp.sum(jax.grad(r)(a) ** 2))(A)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_unknown_strategy_and_backend_rejected():
+    A = jnp.ones((2, 2))
+    with pytest.raises(ValueError, match="unknown strategy"):
+        contract("mk,kn->mn", A, A, strategy="nativ")
+    with pytest.raises(ValueError, match="unknown backend"):
+        contract("mk,kn->mn", A, A, backend="cuda")

@@ -1,0 +1,51 @@
+"""Always-on layout smoke: the first 8 seeded layout-fuzz specs.
+
+The full bit-identical layout tier lives in ``test_differential.py``
+(slow lane, 100 specs × every strategy).  This module keeps a fixed
+8-spec slice of the *same* seeded stream in the fast lane, so a broken
+tile loader fails every ``-m "not slow"`` run, not just nightly: the
+specs are deterministic (``layoutfuzz.gen_layout_case(0..7)``), cover
+exceptional/degenerate orders and non-contiguous storage, and assert
+``np.array_equal`` against ``jnp.einsum`` — the same zero-tolerance bar
+as the slow tier.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from layoutfuzz import gen_layout_case
+from repro.core.contract import contract
+
+N_SMOKE = 8
+
+
+@pytest.mark.parametrize("i", range(N_SMOKE))
+def test_layout_smoke_bit_identical(i):
+    cs, dims, A_np, B_np, treatments = gen_layout_case(i)
+    spec = cs.spec_str()
+    A, B = jnp.asarray(A_np), jnp.asarray(B_np)
+    ref = np.asarray(jnp.einsum(spec, A, B))
+    msg = f"spec #{i} {spec} dims={dims} layouts={treatments}"
+    for strategy in ("auto", "native"):
+        got = np.asarray(contract(spec, A, B, strategy=strategy))
+        assert got.shape == ref.shape, f"{msg} strategy={strategy}"
+        assert np.array_equal(got, ref), (
+            f"{msg} strategy={strategy}: bits diverge"
+        )
+
+
+def test_layout_smoke_under_jit():
+    """The native path must trace cleanly: same 8 specs, contract jitted
+    per spec (shapes are static under jit, layouts are not visible —
+    exactly the conditions the kernel sees in a compiled program)."""
+    for i in range(N_SMOKE):
+        cs, dims, A_np, B_np, _ = gen_layout_case(i)
+        spec = cs.spec_str()
+        A, B = jnp.asarray(A_np), jnp.asarray(B_np)
+        ref = np.asarray(jnp.einsum(spec, A, B))
+        fn = jax.jit(lambda a, b, s=spec: contract(s, a, b,
+                                                   strategy="native"))
+        got = np.asarray(fn(A, B))
+        assert np.array_equal(got, ref), f"spec #{i} {spec} under jit"

@@ -58,14 +58,15 @@ class TestGroupedGemm:
     def test_padding_is_per_group_not_worst_case(self):
         """The packed A buffer pads each group to its own tile multiple —
         a (1,·,·) group costs 8 rows, not the largest group's 256."""
-        from repro.kernels.grouped_gemm import pack_groups
+        from repro.kernels.grouped_gemm import DESC_FIELDS, pack_groups
 
         shapes = [(256, 8, 8), (1, 8, 8)]
         As, Bs = self._rand_groups(shapes)
         A_flat, _, descs, _ = pack_groups(As, Bs, {"u": 8, "v": 8, "k": 8})
         assert A_flat.shape[0] == 256 + 8            # not 2 × 256
-        assert descs.shape == (2, 6)
+        assert descs.shape == (2, len(DESC_FIELDS))
         assert descs[1, 0] == 8                       # padded m of group 2
+        assert np.all(np.asarray(descs[:, 6:]) == 0)  # plain layouts
 
     def test_rejects_bad_groups_and_tiles(self):
         from repro.kernels.ops import grouped_matmul
@@ -79,6 +80,85 @@ class TestGroupedGemm:
             grouped_matmul([A], [A], tiles={"u": 7})   # not a multiple of 8
         with pytest.raises(ValueError):
             grouped_matmul([A], [A], tiles={"b": 8})   # unknown role
+        with pytest.raises(ValueError):                # per-group flags must
+            grouped_matmul([A], [A], trans_a=[True, False])  # match arity
+
+    # ---------------------------- descriptor-table edge cases (vs ref.py)
+    def test_single_group(self):
+        """G=1 is still a table-driven launch, not a special case."""
+        from repro.kernels.ops import grouped_matmul
+        from repro.kernels.ref import ref_grouped_gemm
+
+        As, Bs = self._rand_groups([(13, 29, 7)])
+        (out,) = grouped_matmul(As, Bs, tiles={"u": 8, "v": 8, "k": 8})
+        (ref,) = ref_grouped_gemm(As, Bs)
+        assert out.shape == (13, 29)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_all_sub_tile_group(self):
+        """Every dim below every tile: one clamped block per axis."""
+        from repro.kernels.ops import grouped_matmul
+        from repro.kernels.ref import ref_grouped_gemm
+
+        As, Bs = self._rand_groups([(3, 5, 2), (1, 1, 1)])
+        outs = grouped_matmul(As, Bs)  # default tiles (8, 128, 128) ≫ dims
+        for o, r in zip(outs, ref_grouped_gemm(As, Bs)):
+            assert o.shape == r.shape
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                       atol=1e-5, rtol=1e-5)
+
+    def test_empty_groups(self):
+        """Zero-size groups: k=0 emits exact zeros, m=0/n=0 emit empty
+        results — mixed freely with normal groups in one launch."""
+        from repro.kernels.ops import grouped_matmul
+        from repro.kernels.ref import ref_grouped_gemm
+
+        rng = np.random.default_rng(3)
+        def r(*s):
+            return jnp.asarray(rng.standard_normal(s), jnp.float32)
+
+        As = [r(4, 0), r(0, 6), r(4, 6), r(4, 6)]
+        Bs = [r(0, 5), r(6, 5), r(6, 0), r(6, 5)]
+        outs = grouped_matmul(As, Bs, tiles={"u": 8, "v": 8, "k": 8})
+        refs = ref_grouped_gemm(As, Bs)
+        assert [tuple(o.shape) for o in outs] == [(4, 5), (0, 5), (4, 0),
+                                                  (4, 5)]
+        assert np.all(np.asarray(outs[0]) == 0.0)  # k=0 → exact zeros
+        for o, ref in zip(outs, refs):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                                       atol=1e-5, rtol=1e-5)
+        # degenerate extreme: a batch that is nothing but one empty group
+        (empty,) = grouped_matmul([r(0, 0)], [r(0, 0)])
+        assert empty.shape == (0, 0)
+
+    def test_native_layout_trans_flags(self):
+        """Per-group trans_a/trans_b: transposed-stored operands are
+        consumed in place via the descriptor table — the grouped
+        counterpart of the native tile loaders."""
+        from repro.kernels.grouped_gemm import DESC_FIELDS, pack_groups
+        from repro.kernels.ops import grouped_matmul
+        from repro.kernels.ref import ref_grouped_gemm
+
+        rng = np.random.default_rng(7)
+        def r(*s):
+            return jnp.asarray(
+                rng.integers(-3, 4, s).astype(np.float32))
+
+        # group 0 plain; group 1 both stored transposed; group 2 A only
+        As = [r(5, 7), r(7, 6), r(9, 12)]        # 1: (k,m); 2: (k,m)
+        Bs = [r(7, 9), r(4, 7), r(9, 130)]       # 1: (n,k)
+        ta, tb = [False, True, True], [False, True, False]
+        outs = grouped_matmul(As, Bs, trans_a=ta, trans_b=tb)
+        refs = ref_grouped_gemm(As, Bs, trans_a=ta, trans_b=tb)
+        assert [tuple(o.shape) for o in outs] == [(5, 9), (6, 4), (12, 130)]
+        for g, (o, ref) in enumerate(zip(outs, refs)):
+            assert np.array_equal(np.asarray(o), np.asarray(ref)), g
+        # the flags land in the descriptor table, not in a data permute
+        _, _, descs, _ = pack_groups(As, Bs, trans_a=ta, trans_b=tb)
+        i_ta, i_tb = DESC_FIELDS.index("trans_a"), DESC_FIELDS.index("trans_b")
+        assert list(np.asarray(descs[:, i_ta])) == [0, 1, 1]
+        assert list(np.asarray(descs[:, i_tb])) == [0, 1, 0]
 
     def test_candidate_enumeration(self):
         from repro.tuning.candidates import (

@@ -106,6 +106,91 @@ def test_exceptional_case_gets_brick_candidates():
     assert len(bricks) > 1  # more than one brick depth survived VMEM checks
 
 
+def test_native_candidates_enumerated_and_execute():
+    """The ``native`` strategy is a pallas candidate for every non-scalar
+    spec — including the multi-k and batch-minor classes that have no
+    role-based sb_gemm lowering at all — and every emitted candidate
+    executes to the einsum answer."""
+    cases = [
+        (SPEC, DIMS),
+        ("mkj,jkn->nm", {"m": 8, "k": 4, "j": 5, "n": 8}),  # unfused k-group
+        ("mq,qn->qnm", {"m": 6, "q": 5, "n": 4}),           # batch-minor out
+    ]
+    for spec, dims in cases:
+        cands = enumerate_candidates(spec, dims, backends=("xla", "pallas"))
+        native = [c for c in cands if c.strategy == "native"]
+        assert native, f"no native candidates for {spec}"
+        assert all(c.backend == "pallas" for c in native)
+        A, B = _operands(spec, dims)
+        ref = jnp.einsum(spec, A, B)
+        for c in native:
+            got = contract(spec, A, B, strategy="native",
+                           tiles=c.tiles_dict or None)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=2e-5, atol=2e-5,
+                                       err_msg=f"{spec} {c.key()}")
+
+
+def test_native_vmem_validated_at_enumeration_not_launch():
+    """Satellite check: the per-mode VMEM estimate.  A two-batch-brick
+    spec blows past the budget under tiles the 4-role formula accepts —
+    the native validator must reject it at enumeration/call time, and the
+    enumerator must never emit a config it would reject."""
+    from repro.tuning.candidates import (
+        VMEM_BUDGET_BYTES, estimate_native_vmem_bytes, validate_native_tiles,
+    )
+
+    spec = "tsmk,tskn->tsmn"
+    dims = {m: 64 for m in "tsmkn"}
+    tiles = {"u": 64, "v": 64, "k": 64, "b": 32}
+    validate_tiles(tiles)  # the role-level check passes this config
+    with pytest.raises(ValueError, match="native tiles .* oversized"):
+        validate_native_tiles(spec, dims, tiles)
+    # the same gate guards the public API before any kernel launch
+    A, B = _operands(spec, dims)
+    with pytest.raises(ValueError, match="native tiles .* oversized"):
+        contract(spec, A, B, strategy="native", tiles=tiles)
+    # role-name/value rules still apply to native overrides
+    with pytest.raises(ValueError, match="unknown tile roles"):
+        validate_native_tiles(spec, dims, {"q": 8})
+    # enumeration applies the same estimate: emitted ⇒ within budget
+    for c in enumerate_candidates(spec, dims, backends=("xla", "pallas")):
+        if c.strategy == "native":
+            assert estimate_native_vmem_bytes(
+                spec, dims, c.tiles_dict, jnp.float32
+            ) <= VMEM_BUDGET_BYTES
+
+
+def test_pre_native_cache_incremental_retune(tmp_path):
+    """Schema-growth round-trip: a cache written before the ``native``
+    strategy existed loads cleanly, and re-tuning measures ONLY the new
+    candidate keys — prior timings survive verbatim."""
+    path = tmp_path / "t.json"
+    A, B = _operands()
+    d1 = _disp(path, backends=("xla", "pallas"))
+    d1.contract(SPEC, A, B)
+    ((key, entry),) = d1.cache.entries.items()
+    native_keys = {k for k in entry["results"]
+                   if k.startswith("pallas:native")}
+    assert native_keys  # this spec does get native candidates
+    # rewrite the entry as a pre-native cache would have recorded it,
+    # with distinctive timings so preservation is provable
+    pre = {k: round(v + 1000.0, 3) for k, v in entry["results"].items()
+           if k not in native_keys}
+    d1.cache.put(key, {"best": "xla:auto", "results": pre})
+
+    d2 = _disp(path, backends=("xla", "pallas"))
+    entry2 = d2.tune(SPEC, A, B)
+    assert d2.measurements == len(native_keys)  # only the new candidates
+    assert set(entry2["results"]) == set(pre) | native_keys
+    for k, v in pre.items():
+        assert entry2["results"][k] == v        # old µs kept verbatim
+    assert entry2["best"] in entry2["results"]
+    # steady state: the grown entry is a plain hit — nothing re-measures
+    d2.contract(SPEC, A, B)
+    assert d2.hits == 1 and d2.measurements == len(native_keys)
+
+
 # --------------------------------------------------------------------- tiles
 def test_tiles_plumbing_end_to_end():
     A, B = _operands()

@@ -1,0 +1,128 @@
+"""Observability overhead check: serving throughput with tracing off/on.
+
+The tracer's contract is that *disabled* tracing costs one module-global
+branch per instrumentation site (``repro.obs.trace.enabled()``) and
+that even *enabled* tracing is far cheaper than the jitted model steps
+it brackets.  This benchmark pins that contract on the same
+continuous-batching Poisson trace ``fig14_runtime`` measures: one warm
+runtime serves identical request traces with tracing disabled and
+enabled in interleaved repeats (so machine drift hits both modes
+equally), best-of-N per mode.
+
+``--check`` turns the result into a gate: the enabled-mode cost per
+token must be within ``--tol`` (default 5%) of the disabled-mode cost.
+Disabled mode *is* the untraced configuration — the branch is the only
+instruction that remains — so a pass bounds the overhead of shipping
+the instrumentation at all.
+
+    JAX_PLATFORMS=cpu PYTHONPATH=src python -m benchmarks.obs_overhead \
+        --quick --check --tol 0.05
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from benchmarks.fig14_runtime import ARCH, drive_runtime, poisson_trace
+
+#: results of the last ``measure()`` call (machine-readable).
+LAST_RESULTS: dict = {}
+
+
+def measure(*, quick: bool = True, repeats: int = 3,
+            capacity: int = 65536) -> dict:
+    """Interleaved disabled/enabled serving runs; best-of-``repeats``."""
+    from repro.configs import get_config
+    from repro.models.transformer import Model
+    from repro.obs import trace as obs_trace
+    from repro.runtime.engine import ServingRuntime
+
+    cfg = get_config(ARCH, smoke=True).with_(n_periods=1)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    slots = 2 if quick else 4
+    kw = dict(rate=0.7, max_new=4 if quick else 8, len_hi=24)
+    n_req = 8 if quick else 20
+
+    rt = ServingRuntime(cfg, params, slots=slots, max_len=64,
+                        prefill_chunk=8, precompile=False)
+    # warm-up: compile every bucket the measured trace will hit, in both
+    # modes (the enabled-mode pass also pays any lazy tracer imports)
+    drive_runtime(rt, poisson_trace(cfg, n_requests=4, seed=141, **kw))
+    obs_trace.enable_tracing(obs_trace.Tracer(capacity=capacity))
+    drive_runtime(rt, poisson_trace(cfg, n_requests=4, seed=141, **kw))
+    obs_trace.disable_tracing()
+    obs_trace.set_tracer(None)
+
+    walls: dict[str, list[float]] = {"disabled": [], "enabled": []}
+    tokens = 0
+    for _ in range(repeats):
+        for mode in ("disabled", "enabled"):
+            tr = poisson_trace(cfg, n_requests=n_req, seed=142, **kw)
+            if mode == "enabled":
+                obs_trace.enable_tracing(obs_trace.Tracer(capacity=capacity))
+            try:
+                wall = drive_runtime(rt, tr)
+            finally:
+                obs_trace.disable_tracing()
+                obs_trace.set_tracer(None)
+            walls[mode].append(wall)
+            tokens = sum(len(r.output) for _, r in tr)
+
+    best = {m: min(w) for m, w in walls.items()}
+    us_tok = {m: best[m] * 1e6 / tokens for m in best}
+    overhead = us_tok["enabled"] / us_tok["disabled"] - 1.0
+
+    global LAST_RESULTS
+    LAST_RESULTS = {
+        "arch": ARCH,
+        "quick": bool(quick),
+        "repeats": repeats,
+        "tokens_per_run": tokens,
+        "disabled_us_per_tok": us_tok["disabled"],
+        "enabled_us_per_tok": us_tok["enabled"],
+        "enabled_overhead_frac": overhead,
+        "walls_s": {m: [round(w, 4) for w in ws] for m, ws in walls.items()},
+    }
+    return LAST_RESULTS
+
+
+def run(quick: bool = False):
+    """Benchmark-harness entry: one CSV row per mode + the overhead."""
+    res = measure(quick=quick)
+    return [
+        ("obs_serve_untraced", res["disabled_us_per_tok"], "tracing=off"),
+        ("obs_serve_traced", res["enabled_us_per_tok"],
+         f"overhead={res['enabled_overhead_frac'] * 100:+.1f}%"),
+    ]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="tracing overhead on the serving hot loop")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI profile: fewer requests/slots")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="interleaved repeats per mode (best-of)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when the enabled-mode overhead "
+                         "exceeds --tol")
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="allowed enabled-vs-disabled overhead fraction")
+    args = ap.parse_args(argv)
+    res = measure(quick=args.quick, repeats=args.repeats)
+    print(f"untraced: {res['disabled_us_per_tok']:.1f} us/tok   "
+          f"traced: {res['enabled_us_per_tok']:.1f} us/tok   "
+          f"overhead: {res['enabled_overhead_frac'] * 100:+.2f}% "
+          f"(best of {args.repeats}, {res['tokens_per_run']} tok/run)")
+    if args.check and res["enabled_overhead_frac"] > args.tol:
+        print(f"FAIL: overhead {res['enabled_overhead_frac'] * 100:.2f}% "
+              f"> tol {args.tol * 100:.0f}%", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

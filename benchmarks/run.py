@@ -68,16 +68,28 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true",
                     help="CI profile: fewer repeats, smaller sizes")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="record a span trace per module and write "
+                         "DIR/<module>.trace.json (Perfetto-ready; a "
+                         "fresh tracer per module, so figures don't "
+                         "bleed into each other)")
     args = ap.parse_args()
     if args.quick:
         common.QUICK = True
         os.environ.setdefault("REPRO_BENCH_QUICK", "1")
+    if args.trace_dir:
+        os.makedirs(args.trace_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failed = []
     for mod_name in MODULES:
         if args.only and args.only not in mod_name:
             continue
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        if args.trace_dir:
+            from repro.obs import export as obs_export
+            from repro.obs import trace as obs_trace
+
+            obs_trace.enable_tracing(obs_trace.Tracer())
         try:
             if "quick" in inspect.signature(mod.run).parameters:
                 emit(mod.run(quick=args.quick))
@@ -85,9 +97,19 @@ def main() -> None:
                 emit(mod.run())
             if mod_name in JSON_ARTIFACTS:
                 _write_json_artifact(mod, mod_name)
+            if args.trace_dir:
+                obs_trace.disable_tracing()
+                path = os.path.join(args.trace_dir,
+                                    f"{mod_name}.trace.json")
+                n = obs_export.write_chrome_trace(path)
+                print(f"# trace: {n} events -> {path}", file=sys.stderr)
         except Exception:
             failed.append(mod_name)
             traceback.print_exc()
+        finally:
+            if args.trace_dir:
+                obs_trace.disable_tracing()
+                obs_trace.set_tracer(None)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -50,6 +50,7 @@ from jax import lax
 
 from repro.core.notation import CaseKind, ContractionSpec, parse_spec
 from repro.core.planner import Plan, make_plan
+from repro.obs import trace as _trace
 
 __all__ = [
     "contract",
@@ -173,6 +174,60 @@ def contract(
     Returns:
       The contracted array with modes ordered as ``spec``'s output.
     """
+    if not _trace.enabled():
+        return _contract_impl(
+            spec, A, B, strategy=strategy, backend=backend,
+            force_batch=force_batch, tiles=tiles,
+            preferred_element_type=preferred_element_type,
+            out_dtype=out_dtype, mesh=mesh, in_specs=in_specs,
+            out_spec=out_spec,
+        )
+    with _trace.span("contract", "core") as sp:
+        _annotate_contraction(sp, spec, A, B, strategy, backend, tiles, mesh)
+        return _contract_impl(
+            spec, A, B, strategy=strategy, backend=backend,
+            force_batch=force_batch, tiles=tiles,
+            preferred_element_type=preferred_element_type,
+            out_dtype=out_dtype, mesh=mesh, in_specs=in_specs,
+            out_spec=out_spec,
+        )
+
+
+def _annotate_contraction(sp, spec, A, B, strategy, backend, tiles, mesh):
+    """Attach the roofline-attribution attributes to a ``contract`` span.
+
+    Best-effort: malformed calls annotate nothing and let the
+    implementation raise its usual error (the span then records with an
+    ``error`` attribute)."""
+    try:
+        cs = parse_spec(spec) if isinstance(spec, str) else spec
+        dims = infer_dims(cs, A, B)
+        dtype = jnp.result_type(A.dtype, B.dtype)
+    except Exception:
+        return
+    from repro.obs.roofline import contraction_record
+
+    eager = not (isinstance(A, jax.core.Tracer)
+                 or isinstance(B, jax.core.Tracer))
+    sp.set(
+        strategy=strategy, backend=backend, eager=eager,
+        sharded=mesh is not None, **contraction_record(cs, dims, dtype),
+    )
+    if tiles:
+        sp.set(tiles=dict(tiles))
+    if strategy in ("auto", "flatten", "batched"):
+        try:
+            plan = make_plan(cs, dims,
+                             allow_flatten=strategy in ("auto", "flatten"))
+            sp.set(case_kind=plan.kind)
+        except Exception:
+            pass
+
+
+def _contract_impl(
+    spec, A, B, *, strategy, backend, force_batch, tiles,
+    preferred_element_type, out_dtype, mesh, in_specs, out_spec,
+):
     if strategy not in STRATEGIES:
         raise ValueError(
             f"unknown strategy {strategy!r}; expected one of {STRATEGIES}")

@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import hashlib
 import threading
 from typing import Any, Mapping, Sequence
 
@@ -56,6 +57,7 @@ import jax.numpy as jnp
 
 from repro.core import einsum as _einsum
 from repro.core.notation import ContractionSpec, parse_spec
+from repro.obs import trace as _trace
 
 __all__ = [
     "ProgramInput",
@@ -532,7 +534,18 @@ _PROGRAMS: dict[tuple, CompiledProgram] = {}
 _EXECUTORS: dict[tuple, Any] = {}   # post-pass structural key -> jitted fn
 _STATS = {"hits": 0, "misses": 0}
 
+#: structural signature hash → full signature hashes already compiled —
+#: maintained only while tracing, to flag a compile of an
+#: already-known structure (e.g. a tuning-fingerprint change) as
+#: ``recompile=True`` on its span.
+_SIG_HISTORY: dict[str, set] = {}
+
 _ACTIVE_PROGRAM_RECORDERS: list[list] = []
+
+
+def _sig_hash(sig) -> str:
+    """Short stable digest of a (structural or full) program signature."""
+    return hashlib.sha1(repr(sig).encode()).hexdigest()[:12]
 
 
 @contextlib.contextmanager
@@ -798,6 +811,10 @@ def compile_program(
             if hit is not None:
                 _STATS["hits"] += 1
         if hit is not None:
+            if _trace.enabled():
+                _trace.instant("program_cache_hit", "program",
+                               signature=_sig_hash(sig),
+                               steps=len(prog.steps))
             for rec in _ACTIVE_PROGRAM_RECORDERS:
                 rec.append(hit)
             return hit
@@ -806,13 +823,21 @@ def compile_program(
 
     from repro.core import passes as _passes  # deferred: passes import us
 
-    planned = _passes.run_pipeline(
-        prog, opts, pipeline if pipeline is not None else None
-    )
-    compiled = CompiledProgram(planned, opts, sig, _executor_for(planned, opts))
-    if use_cache:
-        with _LOCK:
-            compiled = _PROGRAMS.setdefault(sig, compiled)
+    with _trace.span("program_compile", "program") as sp:
+        if sp:
+            h = _sig_hash(sig)
+            prior = _SIG_HISTORY.setdefault(_sig_hash(sig[:3]), set())
+            sp.set(signature=h, steps=len(prog.steps),
+                   recompile=bool(prior and h not in prior))
+            prior.add(h)
+        planned = _passes.run_pipeline(
+            prog, opts, pipeline if pipeline is not None else None
+        )
+        compiled = CompiledProgram(
+            planned, opts, sig, _executor_for(planned, opts))
+        if use_cache:
+            with _LOCK:
+                compiled = _PROGRAMS.setdefault(sig, compiled)
     for rec in _ACTIVE_PROGRAM_RECORDERS:
         rec.append(compiled)
     return compiled

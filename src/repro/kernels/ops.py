@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.notation import CaseKind, ContractionSpec, parse_spec
 from repro.core.planner import Plan
+from repro.obs import trace as _trace
 from repro.kernels.addressing import native_mode_tiles, padded_extent
 from repro.kernels.sb_gemm import (
     DEFAULT_TILES,
@@ -149,7 +150,14 @@ def execute_native(
     cs = parse_spec(spec) if isinstance(spec, str) else spec
     out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
     tile_items = None if tiles is None else tuple(sorted(tiles.items()))
-    return _native_diff(cs, tile_items, jnp.dtype(out_dtype), interpret, A, B)
+    if not _trace.enabled():
+        return _native_diff(cs, tile_items, jnp.dtype(out_dtype), interpret,
+                            A, B)
+    with _trace.span("execute_native", "kernels") as sp:
+        sp.set(spec=cs.spec_str(),
+               tiles=dict(tile_items) if tile_items else None)
+        return _native_diff(cs, tile_items, jnp.dtype(out_dtype), interpret,
+                            A, B)
 
 
 def _execute_native_impl(cs, A, B, *, tiles, out_dtype, interpret):
@@ -222,6 +230,21 @@ def grouped_matmul(As, Bs, *, tiles: dict | None = None, out_dtype=None,
     grouped kernel's autotuner knob
     (:func:`repro.tuning.candidates.enumerate_grouped_candidates`).
     """
+    if not _trace.enabled():
+        return _grouped_matmul_impl(
+            As, Bs, tiles=tiles, out_dtype=out_dtype, interpret=interpret,
+            trans_a=trans_a, trans_b=trans_b,
+        )
+    with _trace.span("grouped_matmul", "kernels") as sp:
+        sp.set(n_groups=len(As), tiles=tiles)
+        return _grouped_matmul_impl(
+            As, Bs, tiles=tiles, out_dtype=out_dtype, interpret=interpret,
+            trans_a=trans_a, trans_b=trans_b,
+        )
+
+
+def _grouped_matmul_impl(As, Bs, *, tiles, out_dtype, interpret,
+                         trans_a, trans_b):
     from repro.kernels.grouped_gemm import (
         GROUPED_DEFAULT_TILES, grouped_gemm_pallas, pack_groups,
     )
@@ -268,6 +291,18 @@ def execute_plan(plan: Plan, A, B, *, out_dtype=None, interpret: bool = True,
     extended-transpose brick depth for exceptional plans) — the autotuner's
     knob, also reachable from the public API via ``contract(..., tiles=...)``.
     """
+    if not _trace.enabled():
+        return _execute_plan_impl(
+            plan, A, B, out_dtype=out_dtype, interpret=interpret, tiles=tiles)
+    with _trace.span("execute_plan", "kernels") as sp:
+        sp.set(spec=plan.spec.spec_str(), kind=plan.kind,
+               nested=plan.nested or None, tiles=tiles,
+               has_roles=plan_roles(plan) is not None)
+        return _execute_plan_impl(
+            plan, A, B, out_dtype=out_dtype, interpret=interpret, tiles=tiles)
+
+
+def _execute_plan_impl(plan: Plan, A, B, *, out_dtype, interpret, tiles):
     fs, fd = plan.fspec, plan.fdims
     out_dtype = out_dtype or jnp.result_type(A.dtype, B.dtype)
 

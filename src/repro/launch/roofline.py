@@ -44,9 +44,10 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.shardings import param_logical_axes, tree_shardings
 from repro.models.transformer import _block, init_params
 
-PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
-HBM_BW = 819e9           # bytes/s per chip
-LINK_BW = 50e9           # bytes/s per ICI link
+# the hardware ceilings live in repro.obs.roofline (importable from any
+# layer — this module mutates XLA_FLAGS at import and must never be
+# reachable from the contraction hot path); re-exported here unchanged
+from repro.obs.roofline import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: E402
 
 __all__ = ["roofline_cell", "body_costs", "PEAK_FLOPS", "HBM_BW", "LINK_BW"]
 

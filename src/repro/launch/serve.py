@@ -56,7 +56,26 @@ def main():
     ap.add_argument("--tuning-cache", default=None,
                     help="tuning-cache JSON path (default: "
                          "$REPRO_TUNING_CACHE or ~/.cache/repro/tuning.json)")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="record a span trace of warm-up + serving and "
+                         "write it as Chrome-trace JSON (open in "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--trace-jsonl", default=None, metavar="OUT_JSONL",
+                    help="also write the trace as flat JSONL records "
+                         "(one event per line, span attrs hoisted)")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="trace ring-buffer size in events (oldest "
+                         "events drop beyond it)")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="TICKS",
+                    help="print a metrics-registry snapshot every N "
+                         "serving ticks (runtime mode only)")
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace or args.trace_jsonl:
+        from repro.obs import trace as obs_trace
+
+        tracer = obs_trace.enable_tracing(capacity=args.trace_capacity)
 
     mesh = None
     if args.mesh:
@@ -96,8 +115,27 @@ def main():
         )
         for i in range(args.requests)
     ]
+    registry = runtime.register_metrics()
+    tick_cb = None
+    if args.metrics_every > 0 and not args.legacy:
+        every = args.metrics_every
+
+        def tick_cb(step):
+            if step % every == 0:
+                snap = registry.snapshot()
+                s = snap.get("serving", {})
+                d = snap.get("dispatcher", {})
+                print(f"[tick {step}] tokens_out={s.get('tokens_out')} "
+                      f"done={s.get('requests_done')} "
+                      f"occupancy={s.get('slot_occupancy', 0.0):.2f} "
+                      f"dispatcher_hits={d.get('hits')} "
+                      f"misses={d.get('misses')}")
+
     t0 = time.perf_counter()
-    engine.serve(reqs)
+    if args.legacy:
+        engine.serve(reqs)
+    else:
+        engine.serve(reqs, tick_callback=tick_cb)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in reqs)
     print(f"served {len(reqs)} requests, {total_tokens} tokens "
@@ -109,6 +147,17 @@ def main():
     ))
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[:8]={r.prompt[:8].tolist()} -> {r.output}")
+
+    if tracer is not None:
+        from repro.obs import export as obs_export
+
+        if args.trace:
+            n = obs_export.write_chrome_trace(args.trace, tracer)
+            print(f"trace: {n} events -> {args.trace} "
+                  f"({tracer.dropped} dropped)")
+        if args.trace_jsonl:
+            n = obs_export.write_jsonl(args.trace_jsonl, tracer)
+            print(f"trace: {n} records -> {args.trace_jsonl}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,100 @@
+"""MetricsRegistry: one snapshot API over the stack's scattered counters.
+
+Before this module, every layer kept its own counters behind its own
+accessor — :class:`repro.runtime.metrics.ServingMetrics`
+(``snapshot()``), the autotuner :class:`~repro.tuning.dispatch.Dispatcher`
+(``stats``), :meth:`repro.runtime.buckets.BucketTable.stats`, the
+program cache (:func:`repro.core.program.program_cache_stats`) — and a
+fleet collector would have to know all of them.  The registry unifies
+them behind *named sources*: any zero-arg callable returning a flat dict
+registers under a name, and :meth:`MetricsRegistry.snapshot` returns one
+nested ``{source: {metric: value}}`` dict, JSON-ready for a scraper or a
+periodic printout (``launch/serve --metrics-every``).
+
+Sources are late-bound (called at snapshot time), so a snapshot is
+always current; a source that raises is reported as an ``"error"``
+entry rather than taking the whole snapshot down.  The registry also
+owns free-form counters (:meth:`counter`) for one-off events that have
+no natural home object.
+
+:meth:`repro.runtime.engine.ServingRuntime.register_metrics` wires a
+runtime's sources in under the conventional names ``serving`` /
+``buckets`` / ``dispatcher`` / ``programs``.
+"""
+
+from __future__ import annotations
+
+__all__ = ["MetricsRegistry", "get_registry", "set_registry"]
+
+
+class MetricsRegistry:
+    """Named metric sources + free counters behind one snapshot call."""
+
+    def __init__(self):
+        self._sources: dict[str, object] = {}
+        self._counters: dict[str, float] = {}
+
+    # --------------------------------------------------------------- sources
+    def register(self, name: str, source) -> None:
+        """Register (or replace) a source: a zero-arg callable returning
+        a dict of metric values."""
+        if not callable(source):
+            raise TypeError(f"source {name!r} must be callable")
+        self._sources[str(name)] = source
+
+    def unregister(self, name: str) -> None:
+        self._sources.pop(name, None)
+
+    def sources(self) -> tuple[str, ...]:
+        return tuple(sorted(self._sources))
+
+    # -------------------------------------------------------------- counters
+    def counter(self, name: str, inc: float = 1) -> float:
+        """Bump (and return) a registry-owned counter."""
+        v = self._counters.get(name, 0) + inc
+        self._counters[name] = v
+        return v
+
+    def reset_counters(self) -> None:
+        self._counters.clear()
+
+    # -------------------------------------------------------------- snapshot
+    def snapshot(self) -> dict:
+        """``{source_name: source_dict}`` (+ ``"counters"`` when any) —
+        every source called now.  A raising source contributes
+        ``{"error": "<Type>: <msg>"}`` instead of propagating."""
+        out: dict[str, dict] = {}
+        for name in sorted(self._sources):
+            try:
+                val = self._sources[name]()
+                out[name] = dict(val) if val is not None else {}
+            except Exception as e:  # keep the rest of the snapshot alive
+                out[name] = {"error": f"{type(e).__name__}: {e}"}
+        if self._counters:
+            out["counters"] = dict(self._counters)
+        return out
+
+    def clear(self) -> None:
+        self._sources.clear()
+        self._counters.clear()
+
+
+# --------------------------------------------------------------------------
+# Process-wide registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: MetricsRegistry | None = None
+
+
+def get_registry() -> MetricsRegistry:
+    """The process-wide registry (created lazily)."""
+    global _REGISTRY
+    if _REGISTRY is None:
+        _REGISTRY = MetricsRegistry()
+    return _REGISTRY
+
+
+def set_registry(registry: MetricsRegistry | None) -> None:
+    """Install (or clear, with ``None``) the process-wide registry."""
+    global _REGISTRY
+    _REGISTRY = registry

@@ -1,0 +1,85 @@
+"""Roofline attribution for per-contraction spans (paper §II-B).
+
+The hardware ceilings live here — not in :mod:`repro.launch.roofline`,
+which imports the model zoo and mutates ``XLA_FLAGS`` at import time and
+therefore must never be reachable from the contraction hot path.  The
+launcher-side roofline analysis imports its constants from this module,
+so there is exactly one set of numbers.
+
+Per contraction the attribution is the paper's arithmetic-intensity
+analysis in record form:
+
+* ``flops`` — ``2·∏ dims`` over every distinct mode
+  (:func:`repro.core.planner.contraction_flops`);
+* ``bytes`` — operand + output element counts × itemsize (the minimum
+  traffic of a transpose-free evaluation — exactly what
+  STRIDEDBATCHEDGEMM pays, and what a copy/transpose pipeline exceeds);
+* ``intensity`` — flops / bytes;
+* ``roofline_bound_us`` — ``max(flops/PEAK_FLOPS, bytes/HBM_BW)``: the
+  time the roofline says this contraction cannot beat.
+
+A span carrying ``roofline_bound_us`` gains ``roofline_fraction`` (bound
+÷ measured duration) when it closes (see :class:`repro.obs.trace.Tracer`)
+— ~1.0 means roofline-saturating, ≪1 means overhead or a wrong strategy.
+Host-measured durations of *jit-traced* calls are trace time, not run
+time; emitters flag those spans ``eager=False``.  The autotuner's cache
+hits instead carry *measured* kernel time, giving the trustworthy
+fraction (:func:`measured_fraction`).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "PEAK_FLOPS", "HBM_BW", "LINK_BW",
+    "roofline_bound_us", "arithmetic_intensity",
+    "contraction_record", "measured_fraction",
+]
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+
+def roofline_bound_us(flops: float, bytes_: float) -> float:
+    """Minimum achievable µs under the compute and memory ceilings."""
+    return max(flops / PEAK_FLOPS, bytes_ / HBM_BW) * 1e6
+
+
+def arithmetic_intensity(flops: float, bytes_: float) -> float:
+    """Flops per byte moved (0.0 for a zero-byte degenerate case)."""
+    return flops / bytes_ if bytes_ else 0.0
+
+
+def measured_fraction(flops: float, bytes_: float, measured_us: float) -> float:
+    """Achieved fraction of roofline from a *measured* kernel time."""
+    if measured_us <= 0:
+        return 0.0
+    return roofline_bound_us(flops, bytes_) / measured_us
+
+
+def contraction_record(cs, dims: dict, dtype) -> dict:
+    """The attribution attributes of one pairwise contraction.
+
+    ``cs`` is a :class:`repro.core.notation.ContractionSpec`, ``dims``
+    the mode→size map, ``dtype`` the operand result type.  Pure
+    arithmetic — safe in any layer, cheap enough to run per traced span.
+    """
+    from repro.core.planner import contraction_flops, modes_size
+
+    itemsize = int(np.dtype(dtype).itemsize)
+    flops = contraction_flops(cs, dims)
+    nbytes = itemsize * (
+        modes_size(cs.a_modes, dims)
+        + modes_size(cs.b_modes, dims)
+        + modes_size(cs.c_modes, dims)
+    )
+    return {
+        "spec": cs.spec_str(),
+        "dtype": np.dtype(dtype).name,
+        "flops": int(flops),
+        "bytes": int(nbytes),
+        "intensity": arithmetic_intensity(flops, nbytes),
+        "roofline_bound_us": roofline_bound_us(flops, nbytes),
+    }

@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import decode_step, init_cache, prefill
+from repro.obs import trace as _trace
 from repro.runtime.buckets import BucketLattice, BucketTable, tuning_key_component
 from repro.runtime.metrics import ServingMetrics
 from repro.runtime.scheduler import (
@@ -159,6 +160,13 @@ class ServingRuntime:
             self.program_stats = self.precompile_programs(
                 prompt_lens=pretune_prompt_lens
             )
+        # the warm-up's dispatcher traffic is bookkept under
+        # pretune_stats; the serve phase then starts its hit/miss/
+        # measurement counters from a deterministic zero
+        if pretune and self.tuner is not None:
+            self.pretune_stats["dispatcher"] = dict(self.tuner.stats)
+            if hasattr(self.tuner, "reset_counters"):
+                self.tuner.reset_counters()
 
     # --------------------------------------------------------------- helpers
     @contextlib.contextmanager
@@ -318,6 +326,10 @@ class ServingRuntime:
             )
         state = self.scheduler.submit(request)
         self.metrics.on_submit(request.rid)
+        if _trace.enabled():
+            _trace.instant("submit", "runtime", rid=request.rid,
+                           prompt_len=len(request.prompt),
+                           max_new=request.max_new_tokens)
         return state
 
     def evict(self, rid: int) -> Request:
@@ -326,7 +338,31 @@ class ServingRuntime:
         immediately."""
         state = self.scheduler.evict(rid)
         self.metrics.on_evict(rid)
+        if _trace.enabled():
+            _trace.instant("evict", "runtime", rid=rid, reason="explicit")
         return state.request
+
+    # ------------------------------------------------------------ metrics
+    def register_metrics(self, registry=None):
+        """Wire this runtime's counters into a
+        :class:`repro.obs.registry.MetricsRegistry` (default: the
+        process-wide one) under the conventional source names:
+        ``serving`` (request/token/latency metrics), ``buckets``
+        (compile-once table), ``programs`` (process program cache) and —
+        when a tuner is attached — ``dispatcher``.  Returns the registry.
+
+        Explicit, not automatic: constructing a runtime must not mutate
+        process-global state behind a test's back."""
+        from repro.core.program import program_cache_stats
+        from repro.obs.registry import get_registry
+
+        reg = registry if registry is not None else get_registry()
+        reg.register("serving", self.metrics.snapshot)
+        reg.register("buckets", self.buckets.stats)
+        reg.register("programs", program_cache_stats)
+        if self.tuner is not None:
+            reg.register("dispatcher", lambda: self.tuner.stats)
+        return reg
 
     # ------------------------------------------------------------- execution
     def _sample(self, state: RequestState, logits_row) -> int:
@@ -338,6 +374,13 @@ class ServingRuntime:
         return int(jax.random.categorical(state.next_key(), logits_row))
 
     def _run_prefill_chunk(self, state: RequestState, chunk: int) -> None:
+        with _trace.span("prefill_chunk", "runtime") as sp:
+            if sp:
+                sp.set(rid=state.rid, chunk=chunk, pos=state.pos,
+                       slot=state.slot)
+            self._run_prefill_chunk_impl(state, chunk)
+
+    def _run_prefill_chunk_impl(self, state: RequestState, chunk: int) -> None:
         if state.cache is None:
             state.cache = init_cache(self.cfg, 1, self.max_len)
         toks = jnp.asarray(
@@ -358,12 +401,17 @@ class ServingRuntime:
                 self.cache = _write_slot(self.cache, state.cache, state.slot)
             self.scheduler.prefill_done(state)
             self.metrics.on_first_token(state.rid)
+            if _trace.enabled():
+                _trace.instant("first_token", "runtime", rid=state.rid)
             self._maybe_finish(state)
 
     def _maybe_finish(self, state: RequestState) -> None:
         if state.n_generated >= state.request.max_new_tokens:
             self.scheduler.finish(state)
             self.metrics.on_finish(state.rid)
+            if _trace.enabled():
+                _trace.instant("finish", "runtime", rid=state.rid,
+                               n_generated=state.n_generated)
 
     def _run_decode(self, decodes: list[RequestState]) -> None:
         # cache-length cap: a slot whose next token would fall off the
@@ -372,9 +420,20 @@ class ServingRuntime:
             if state.prompt_len + state.n_generated - 1 >= self.max_len:
                 self.scheduler.finish(state, EVICTED)
                 self.metrics.on_evict(state.rid)
+                if _trace.enabled():
+                    _trace.instant("evict", "runtime", rid=state.rid,
+                                   reason="cache_cap")
                 decodes.remove(state)
         if not decodes:
             return
+        with _trace.span("decode_batch", "runtime") as sp:
+            if sp:
+                sp.set(n_active=len(decodes),
+                       bucket=self.lattice.decode_bucket(len(decodes)),
+                       rids=[s.rid for s in decodes])
+            self._run_decode_impl(decodes)
+
+    def _run_decode_impl(self, decodes: list[RequestState]) -> None:
         n = len(decodes)
         bucket = self.lattice.decode_bucket(n)
         key = self.buckets.key("decode", bucket, self._fingerprint())
@@ -417,19 +476,23 @@ class ServingRuntime:
         just-prefilled slot left out of the batch would have its cache
         advanced by a *discarded* decode and its first token would be
         fed again next tick."""
-        plan = self.scheduler.schedule()
-        engaged = {s.rid for s, _ in plan.prefills}
-        for state, chunk in plan.prefills:
-            self._run_prefill_chunk(state, chunk)
-        batch = self.scheduler.decode_batch()
-        self._run_decode(batch)
-        # occupancy counts slots that did work this tick: _run_decode
-        # drops cap-evicted states from `batch` in place (they launched
-        # nothing), and the count is taken before finish() released the
-        # requests that completed, so a full-throughput stream of short
-        # requests reads as busy
-        engaged.update(s.rid for s in batch)
-        self.metrics.on_tick(len(engaged))
+        with _trace.span("tick", "runtime") as sp:
+            plan = self.scheduler.schedule()
+            engaged = {s.rid for s, _ in plan.prefills}
+            for state, chunk in plan.prefills:
+                self._run_prefill_chunk(state, chunk)
+            batch = self.scheduler.decode_batch()
+            self._run_decode(batch)
+            # occupancy counts slots that did work this tick: _run_decode
+            # drops cap-evicted states from `batch` in place (they launched
+            # nothing), and the count is taken before finish() released the
+            # requests that completed, so a full-throughput stream of short
+            # requests reads as busy
+            engaged.update(s.rid for s in batch)
+            self.metrics.on_tick(len(engaged))
+            if sp:
+                sp.set(n_prefills=len(plan.prefills), n_decode=len(batch),
+                       engaged=sorted(engaged))
 
     def admit_now(self, request: Request) -> bool:
         """Legacy-style admission: bind a slot and run the *whole*
@@ -446,13 +509,16 @@ class ServingRuntime:
             )
         return True
 
-    def serve(self, requests: list[Request], max_steps: int = 10_000):
+    def serve(self, requests: list[Request], max_steps: int = 10_000,
+              tick_callback=None):
         """Run to completion with continuous batching.
 
         Requests still live when ``max_steps`` runs out are marked
         ``status="unfinished"`` (``done`` stays False) and a
         ``RuntimeWarning`` is emitted — never silently returned as if
-        complete."""
+        complete.  ``tick_callback``, when given, is invoked as
+        ``tick_callback(step)`` after every tick (the launcher's
+        periodic metrics printout hangs off it)."""
         for r in requests:
             self.submit(r)
         self.metrics.start()
@@ -460,6 +526,8 @@ class ServingRuntime:
         while self.scheduler.has_work() and steps < max_steps:
             self.tick()
             steps += 1
+            if tick_callback is not None:
+                tick_callback(steps)
         self.metrics.stop()
         if self.scheduler.has_work():
             leftover = [s for s in list(self.scheduler.queue)

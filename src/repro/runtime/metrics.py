@@ -28,6 +28,16 @@ class ServingMetrics:
     from *decode efficiency* (active slots / bucket rows — how much of
     each launched decode batch is useful work; 1.0 for a perfectly
     snapped bucket).
+
+    **Event ordering is enforced.**  Per-request events are only
+    honoured for a request with a live ``on_submit`` record, and a first
+    token is only honoured once: an ``on_first_token`` for a request
+    already evicted (or never submitted, or already credited) must not
+    bump ``tokens_out`` or fabricate a TTFT sample, and a double
+    ``on_finish`` must not double-count a latency.  Out-of-order events
+    are dropped and counted in ``stray_events`` — visible in
+    :meth:`snapshot`, so a runtime bug shows up as a nonzero counter
+    instead of silently skewed latency percentiles.
     """
 
     def __init__(self, slots: int, clock=time.perf_counter):
@@ -42,6 +52,7 @@ class ServingMetrics:
         self.decode_calls = 0
         self.ticks = 0
         self.evictions = 0
+        self.stray_events = 0      # out-of-order request events, dropped
         self._active_rows = 0      # Σ active slots over decode calls
         self._bucket_rows = 0      # Σ bucket rows over decode calls
         self._occupancy = 0.0      # Σ (active / slots) over ticks
@@ -67,22 +78,30 @@ class ServingMetrics:
         self._submit[rid] = self.clock()
 
     def on_first_token(self, rid: int) -> None:
+        if rid not in self._submit or rid in self._first:
+            # evicted-then-completed, never submitted, or a duplicate:
+            # no token credit, no fabricated TTFT sample
+            self.stray_events += 1
+            return
         t = self.clock()
         self._first[rid] = t
-        if rid in self._submit:
-            self._ttft.append(t - self._submit[rid])
+        self._ttft.append(t - self._submit[rid])
         self.tokens_out += 1
 
     def on_token(self, n: int = 1) -> None:
         self.tokens_out += n
 
     def on_finish(self, rid: int) -> None:
-        t = self.clock()
-        if rid in self._submit:
-            self._latency.append(t - self._submit.pop(rid))
+        if rid not in self._submit:
+            self.stray_events += 1     # double-finish / finish-after-evict
+            return
+        self._latency.append(self.clock() - self._submit.pop(rid))
         self._first.pop(rid, None)
 
     def on_evict(self, rid: int) -> None:
+        if rid not in self._submit:
+            self.stray_events += 1     # double-evict / never submitted
+            return
         self.evictions += 1
         self._submit.pop(rid, None)
         self._first.pop(rid, None)
@@ -90,6 +109,9 @@ class ServingMetrics:
     def on_unfinished(self, rid: int) -> None:
         """Drop a request that ended without completing (max_steps
         exhaustion): no latency sample, no leaked submit timestamp."""
+        if rid not in self._submit:
+            self.stray_events += 1
+            return
         self._submit.pop(rid, None)
         self._first.pop(rid, None)
 
@@ -119,6 +141,7 @@ class ServingMetrics:
             "decode_calls": self.decode_calls,
             "ticks": self.ticks,
             "evictions": self.evictions,
+            "stray_events": self.stray_events,
             "requests_done": len(self._latency),
             "wall_s": wall,
             "throughput_tok_s": self.tokens_out / wall if wall > 0 else 0.0,

@@ -25,6 +25,8 @@ import dataclasses
 import jax
 import numpy as np
 
+from repro.obs import trace as _trace
+
 __all__ = ["Request", "RequestState", "Scheduler", "TickPlan"]
 
 #: request lifecycle states (``Request.status``).
@@ -123,6 +125,9 @@ class Scheduler:
         state.request.status = PREFILL
         self.active[state.slot] = state
         self._prefilling.append(state)
+        if _trace.enabled():
+            _trace.instant("admit", "scheduler", rid=state.rid,
+                           slot=state.slot)
         return state
 
     def prefill_done(self, state: RequestState) -> None:
@@ -154,17 +159,22 @@ class Scheduler:
     def schedule(self) -> TickPlan:
         """Admissions + one prefill chunk per prefilling request, in
         FIFO/admission order."""
-        admitted = []
-        while True:
-            state = self.admit_next()
-            if state is None:
-                break
-            admitted.append(state)
-        prefills = [
-            (s, self.lattice.next_chunk(s.remaining_prompt))
-            for s in list(self._prefilling)
-        ]
-        return TickPlan(admitted=admitted, prefills=prefills)
+        with _trace.span("schedule", "scheduler") as sp:
+            admitted = []
+            while True:
+                state = self.admit_next()
+                if state is None:
+                    break
+                admitted.append(state)
+            prefills = [
+                (s, self.lattice.next_chunk(s.remaining_prompt))
+                for s in list(self._prefilling)
+            ]
+            if sp:
+                sp.set(admitted=[s.rid for s in admitted],
+                       n_prefilling=len(self._prefilling),
+                       queued=len(self.queue), free=len(self._free))
+            return TickPlan(admitted=admitted, prefills=prefills)
 
     def decode_batch(self) -> list[RequestState]:
         """Every slot ready for one decode step, in slot order.  Collect

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.notation import ContractionSpec, parse_spec
+from repro.obs import trace as _trace
 from repro.tuning.cache import TuningCache, canonical_key
 from repro.tuning.candidates import Candidate, enumerate_candidates
 from repro.tuning.measure import measure_candidates
@@ -139,28 +140,35 @@ class Dispatcher:
         dims = infer_dims(cs, A, B)
         dtype = jnp.result_type(A.dtype, B.dtype)
         key = canonical_key(cs, dims, dtype)
-        cands = enumerate_candidates(cs, dims, dtype=dtype, backends=self.backends)
-        prior = self.cache.get(key)
-        results = dict(prior["results"]) if prior else {}
-        todo = [c for c in cands if c.key() not in results]
-        measured = (
-            measure_candidates(todo, cs, A, B, iters=self.iters, warmup=self.warmup)
-            if todo
-            else {}
-        )
-        self.measurements += len(measured)
-        results.update({k: m.us for k, m in measured.items()})
-        best = min(results, key=results.get)
-        auto_key = Candidate("auto", "xla").key()
-        if (
-            best != auto_key
-            and auto_key in results
-            and results[best] > self.TIE_MARGIN * results[auto_key]
-        ):
-            best = auto_key
-        entry = {"best": best, "results": results}
-        self.cache.put(key, entry)
-        return entry
+        with _trace.span("tune", "tuning") as sp:
+            cands = enumerate_candidates(
+                cs, dims, dtype=dtype, backends=self.backends)
+            prior = self.cache.get(key)
+            results = dict(prior["results"]) if prior else {}
+            todo = [c for c in cands if c.key() not in results]
+            measured = (
+                measure_candidates(
+                    todo, cs, A, B, iters=self.iters, warmup=self.warmup)
+                if todo
+                else {}
+            )
+            self.measurements += len(measured)
+            results.update({k: m.us for k, m in measured.items()})
+            best = min(results, key=results.get)
+            auto_key = Candidate("auto", "xla").key()
+            if (
+                best != auto_key
+                and auto_key in results
+                and results[best] > self.TIE_MARGIN * results[auto_key]
+            ):
+                best = auto_key
+            entry = {"best": best, "results": results}
+            self.cache.put(key, entry)
+            if sp:
+                sp.set(spec=cs.spec_str(), n_candidates=len(cands),
+                       n_measured=len(measured), winner=best,
+                       best_us=float(results[best]))
+            return entry
 
     # -------------------------------------------------------------- contract
     def contract(
@@ -194,6 +202,11 @@ class Dispatcher:
             concrete = not (
                 isinstance(A, jax.core.Tracer) or isinstance(B, jax.core.Tracer)
             )
+            if _trace.enabled():
+                _trace.instant(
+                    "tuning_miss", "tuning", spec=cs.spec_str(),
+                    policy=self.policy, concrete=concrete,
+                )
             if self.policy != "measure" or not concrete:
                 return analytic()
             entry = self.tune(cs, A, B)
@@ -201,6 +214,21 @@ class Dispatcher:
         else:
             self.hits += 1
             cand = hit[0]
+            if _trace.enabled():
+                from repro.obs.roofline import contraction_record
+
+                rec = contraction_record(cs, dims, dtype)
+                measured_us = hit[1]
+                _trace.instant(
+                    "tuning_hit", "tuning", spec=cs.spec_str(),
+                    winner=cand.key(), measured_us=measured_us,
+                    flops=rec["flops"], bytes=rec["bytes"],
+                    intensity=rec["intensity"],
+                    roofline_fraction=(
+                        rec["roofline_bound_us"] / measured_us
+                        if measured_us > 0 else 0.0
+                    ),
+                )
         return contract(
             cs, A, B,
             strategy=cand.strategy, backend=cand.backend,
@@ -220,28 +248,31 @@ class Dispatcher:
         rng = np.random.default_rng(seed)
         stats = {"unique": 0, "cached": 0, "tuned": 0, "skipped": 0}
         seen: set[str] = set()
-        for spec_str, dims, dtype_str in records:
-            cs = parse_spec(spec_str)
-            dtype = jnp.dtype(dtype_str)
-            key = canonical_key(cs, dims, dtype)
-            if key in seen:
-                continue
-            seen.add(key)
-            stats["unique"] += 1
-            if key in self.cache:
-                stats["cached"] += 1
-                continue
-            if self.policy != "measure":
-                stats["skipped"] += 1
-                continue
-            A = jnp.asarray(
-                rng.standard_normal([dims[m] for m in cs.a_modes]), dtype
-            )
-            B = jnp.asarray(
-                rng.standard_normal([dims[m] for m in cs.b_modes]), dtype
-            )
-            self.tune(cs, A, B)
-            stats["tuned"] += 1
+        with _trace.span("pretune", "tuning") as sp:
+            for spec_str, dims, dtype_str in records:
+                cs = parse_spec(spec_str)
+                dtype = jnp.dtype(dtype_str)
+                key = canonical_key(cs, dims, dtype)
+                if key in seen:
+                    continue
+                seen.add(key)
+                stats["unique"] += 1
+                if key in self.cache:
+                    stats["cached"] += 1
+                    continue
+                if self.policy != "measure":
+                    stats["skipped"] += 1
+                    continue
+                A = jnp.asarray(
+                    rng.standard_normal([dims[m] for m in cs.a_modes]), dtype
+                )
+                B = jnp.asarray(
+                    rng.standard_normal([dims[m] for m in cs.b_modes]), dtype
+                )
+                self.tune(cs, A, B)
+                stats["tuned"] += 1
+            if sp:
+                sp.set(**stats)
         return stats
 
     # ----------------------------------------------------------------- stats
@@ -254,6 +285,17 @@ class Dispatcher:
             "entries": len(self.cache),
             "policy": self.policy,
         }
+
+    def reset_counters(self) -> None:
+        """Zero the hit/miss/measurement counters (cache untouched).
+
+        The serving runtime calls this after its pretune+precompile
+        warm-up so the serve-phase counters start from a deterministic
+        zero (see ``ServingRuntime.pretune_stats["dispatcher"]`` for the
+        warm-up's own numbers)."""
+        self.hits = 0
+        self.misses = 0
+        self.measurements = 0
 
 
 # -------------------------------------------------------------- path pricing

@@ -24,7 +24,15 @@ Rows:
 * ``fig14_zero_recompiles`` — bucket compiles during the measured trace
   after warm-up (acceptance: 0);
 * ``fig14_grouped_vs_padded`` — grouped kernel µs vs worst-case-padded
-  uniform batch µs (derived: speedup and the tile-work ratio).
+  uniform batch µs (derived: speedup and the tile-work ratio);
+* ``fig14_multitenant_*`` — a multi-tenant trace (several tenants, each
+  with a shared system prompt; heavy-tailed user turns; staggered
+  arrivals) through the **paged** runtime vs a slot-capped unpaged
+  baseline holding the *same device memory* (the pool's usable rows ==
+  the baseline's ``slots × max_len`` rows).  Acceptance: the paged
+  runtime sustains ≥ 4× the baseline's peak concurrent live requests,
+  token-identical greedy output, a nonzero prefix-hit rate, zero leaked
+  pages at drain, and zero bucket compiles after warm-up.
 
 ``benchmarks/run.py`` writes these results to ``BENCH_runtime.json`` so
 the serving perf trajectory is machine-readable from this PR on.
@@ -90,6 +98,17 @@ def drive_legacy(engine, trace) -> float:
 
 def drive_runtime(rt, trace) -> float:
     """The continuous-batching loop: submit arrivals, tick."""
+    wall, _ = drive_runtime_peak(rt, trace)
+    return wall
+
+
+def drive_runtime_peak(rt, trace) -> tuple[float, int]:
+    """Like :func:`drive_runtime` but also reports the peak number of
+    concurrently live requests — the most requests that did work
+    (prefill or decode) within one tick, read from the runtime's
+    ``peak_engaged`` counter.  (Sampling ``scheduler.n_active`` after
+    each tick undercounts: a request admitted at tick start and one
+    finishing at tick end were genuinely concurrent mid-tick.)"""
     i, tick, n = 0, 0, len(trace)
     t0 = time.perf_counter()
     while i < n or rt.scheduler.has_work():
@@ -98,7 +117,45 @@ def drive_runtime(rt, trace) -> float:
             i += 1
         rt.tick()
         tick += 1
-    return time.perf_counter() - t0
+    return time.perf_counter() - t0, rt.metrics.peak_engaged
+
+
+def multitenant_trace(cfg, *, tenants: int, per_tenant: int, rate: float,
+                      sys_len: int, tail_hi: int, seed: int):
+    """``(arrival_tick, Request)`` pairs for a multi-tenant workload.
+
+    Each tenant owns a ``sys_len``-token system prompt shared by all its
+    requests; user turns are short ragged tails.  Every tenant's *first*
+    request arrives at tick 0 and the rest arrive from tick 5 on
+    (exponential gaps) — the firsts' prefills commit and publish the
+    prefix index before the flood, so later arrivals map the resident
+    system-prompt pages instead of recomputing them."""
+    from repro.runtime.scheduler import Request
+
+    rng = np.random.default_rng(seed)
+    sys_prompts = [
+        rng.integers(0, cfg.vocab_size, size=sys_len).astype(np.int32)
+        for _ in range(tenants)
+    ]
+    n_rest = tenants * (per_tenant - 1)
+    gaps = rng.exponential(1.0 / rate, size=n_rest)
+    rest_ticks = 5 + np.floor(np.cumsum(gaps)).astype(int)
+    events = []
+    for rid in range(tenants * per_tenant):
+        if rid < tenants:                   # tenant seeds, tick 0
+            tenant, tick = rid, 0
+        else:
+            tenant = int(rng.integers(tenants))
+            tick = int(rest_ticks[rid - tenants])
+        tail = rng.integers(
+            0, cfg.vocab_size, size=int(rng.integers(1, tail_hi + 1))
+        ).astype(np.int32)
+        events.append((tick, Request(
+            rid=rid,
+            prompt=np.concatenate([sys_prompts[tenant], tail]),
+            max_new_tokens=int(rng.integers(4, 7)),
+        )))
+    return events
 
 
 # ---------------------------------------------------------- grouped kernel
@@ -160,6 +217,75 @@ def _grouped_row(quick: bool):
     return t_grouped, t_padded, work_ratio
 
 
+# ------------------------------------------------------------ multi-tenant
+def _multitenant_row(cfg, params, quick: bool) -> dict:
+    """Paged runtime vs slot-capped unpaged baseline at equal memory.
+
+    The baseline holds ``slots_b`` contiguous ``max_len`` caches; the
+    paged runtime gets 4× the slots but only ``slots_b * max_len`` rows
+    of pool (plus the reserved null page) cut into ``page_size``-row
+    pages — identical KV memory, so any extra concurrency it sustains
+    comes from paging + prefix sharing, not from a bigger budget."""
+    from repro.runtime.engine import ServingRuntime
+
+    slots_b = 2
+    mult = 4
+    page_size = 4
+    max_len = 64
+    pages = slots_b * (max_len // page_size) + 1   # + the null page
+    mk = lambda seed: multitenant_trace(  # noqa: E731
+        cfg, tenants=2, per_tenant=8 if quick else 15,
+        rate=3.0, sys_len=12, tail_hi=6, seed=seed,
+    )
+
+    base = ServingRuntime(cfg, params, slots=slots_b, max_len=max_len,
+                          prefill_chunk=8, precompile=False)
+    drive_runtime(base, mk(241))
+    base.metrics.reset()        # peak_engaged covers the measured trace only
+    t_base, peak_base = drive_runtime_peak(base, (ref := mk(242)))
+
+    rt = ServingRuntime(cfg, params, slots=slots_b * mult, max_len=max_len,
+                        prefill_chunk=8, precompile=False,
+                        paged=True, page_size=page_size, pages=pages)
+    drive_runtime(rt, mk(241))         # warm the live bucket set
+    rt.precompile_buckets()            # pin the rest of the lattice
+    compiles_warm = rt.buckets.compiles
+    rt.metrics.reset()
+    rt.buckets.reset_stats()
+    rt.metrics.start()
+    t_paged, peak_paged = drive_runtime_peak(rt, (got := mk(242)))
+    rt.metrics.stop()
+
+    identical = all(
+        a.output == b.output for (_, a), (_, b) in zip(ref, got)
+    )
+    tok_base = sum(len(r.output) for _, r in ref)
+    tok_paged = sum(len(r.output) for _, r in got)
+    leaked = rt.pool.usable - rt.pool.n_free
+    return {
+        "slots_baseline": slots_b,
+        "slots_paged": slots_b * mult,
+        "page_size": page_size,
+        "pool_pages": rt.pool.usable,
+        "pool_rows": rt.pool.usable * page_size,
+        "baseline_rows": slots_b * max_len,
+        "trace_requests": len(got),
+        "peak_live_baseline": peak_base,
+        "peak_live_paged": peak_paged,
+        "concurrency_ratio": peak_paged / peak_base,
+        "wall_s_baseline": t_base,
+        "wall_s_paged": t_paged,
+        "tok_per_s_baseline": tok_base / t_base,
+        "tok_per_s_paged": tok_paged / t_paged,
+        "token_identity": identical,
+        "recompiles_after_warmup": rt.buckets.compiles - compiles_warm,
+        "leaked_pages": leaked,
+        "leaked_refcounts": len(rt.pool.refcount),
+        "pages": rt.pool.stats(),
+        "serving": rt.metrics.snapshot(rt.buckets),
+    }
+
+
 # --------------------------------------------------------------------- run
 def run(quick: bool = False):
     from repro.configs import get_config
@@ -207,6 +333,7 @@ def run(quick: bool = False):
     speedup = tps_runtime / tps_legacy
 
     t_grouped, t_padded, work_ratio = _grouped_row(quick)
+    mt = _multitenant_row(cfg, params, quick)
 
     global LAST_RESULTS
     LAST_RESULTS = {
@@ -227,6 +354,7 @@ def run(quick: bool = False):
         "grouped_gemm": {"grouped_us": t_grouped, "padded_us": t_padded,
                          "speedup": t_padded / t_grouped,
                          "tile_work_ratio": work_ratio},
+        "multitenant": mt,
     }
     return [
         ("fig14_serve_legacy", t_legacy * 1e6 / tok_legacy,
@@ -238,4 +366,14 @@ def run(quick: bool = False):
         ("fig14_grouped_vs_padded", t_grouped,
          f"padded_us={t_padded:.1f} speedup={t_padded / t_grouped:.2f}x "
          f"tile_work_ratio={work_ratio:.2f}"),
+        ("fig14_multitenant_concurrency", mt["concurrency_ratio"],
+         f"peak_live {mt['peak_live_paged']} vs {mt['peak_live_baseline']} "
+         f"at equal memory ({mt['pool_rows']} pooled rows vs "
+         f"{mt['baseline_rows']} slot rows)"),
+        ("fig14_multitenant_identity", 0.0,
+         f"identical={mt['token_identity']} "
+         f"prefix_hits={mt['pages']['prefix_hits']} "
+         f"shared_tokens={mt['pages']['prefix_shared_tokens']} "
+         f"leaked_pages={mt['leaked_pages']} "
+         f"recompiles={mt['recompiles_after_warmup']}"),
     ]

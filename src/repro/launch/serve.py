@@ -45,6 +45,17 @@ def main():
     ap.add_argument("--legacy", action="store_true",
                     help="serve through the old fixed-slot ServeEngine "
                          "(whole-prompt prefill, full-slot decode)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve off the paged KV-cache: fixed-size pages, "
+                         "per-request page tables, admission capped by free "
+                         "pages, content-hash prefix sharing")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="token rows per KV page (paged mode)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="total pool pages incl. the reserved null page "
+                         "(default: null page + slots*max_len rows worth)")
+    ap.add_argument("--no-prefix-share", action="store_true",
+                    help="disable content-hash prefix sharing (paged mode)")
     ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
                     help="serve sharded over a data×model host mesh, e.g. "
                          "'2x4' (needs that many devices; simulate on CPU "
@@ -70,6 +81,8 @@ def main():
                     help="print a metrics-registry snapshot every N "
                          "serving ticks (runtime mode only)")
     args = ap.parse_args()
+    if args.paged and args.legacy:
+        ap.error("--paged serves through the runtime; drop --legacy")
 
     tracer = None
     if args.trace or args.trace_jsonl:
@@ -98,9 +111,15 @@ def main():
         engine = runtime = ServingRuntime(
             cfg, params, slots=args.slots, max_len=args.max_len,
             prefill_chunk=args.chunk,
+            paged=args.paged, page_size=args.page_size, pages=args.pages,
+            prefix_sharing=not args.no_prefix_share,
             pretune=args.pretune, tuning_cache=args.tuning_cache, mesh=mesh,
         )
         print(f"runtime buckets: {runtime.lattice.describe()}")
+        if args.paged:
+            print(f"page pool: {runtime.pool.usable} usable pages x "
+                  f"{runtime.pool.page_size} rows "
+                  f"(prefix sharing {'off' if args.no_prefix_share else 'on'})")
     if args.pretune:
         print(f"pretune: {runtime.pretune_stats} "
               f"({time.perf_counter() - t0:.1f}s, "
@@ -145,6 +164,11 @@ def main():
         f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
         for k, v in snap.items()
     ))
+    if args.paged:
+        print("pages: " + ", ".join(
+            f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in runtime.pool.stats().items()
+        ))
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[:8]={r.prompt[:8].tolist()} -> {r.output}")
 

@@ -16,8 +16,12 @@ layer the ROADMAP's north star asks for:
   tuning-cache fingerprint folded into its key;
 * :mod:`repro.runtime.engine` — :class:`ServingRuntime`, the tick loop
   driving scheduler → buckets → kernels;
+* :mod:`repro.runtime.pages` — the paged KV-cache: a block-pool
+  allocator (fixed-size pages, per-request page tables, refcounts) with
+  content-hash prefix sharing, so admission is capped by free pages
+  rather than ``slots × max_len`` contiguous rows;
 * :mod:`repro.runtime.metrics` — throughput, p50/p99 latency,
-  slot-utilization and bucket-hit-rate counters.
+  slot-utilization, page-pool and bucket-hit-rate counters.
 
 :class:`repro.serving.engine.ServeEngine` is now a thin wrapper running
 this runtime in its legacy configuration (no chunking, full-slot
@@ -27,11 +31,15 @@ decode), kept token-identical as the correctness oracle.
 from repro.runtime.buckets import BucketLattice, BucketTable
 from repro.runtime.engine import ServingRuntime
 from repro.runtime.metrics import ServingMetrics
+from repro.runtime.pages import PagePool, PagedKV, PoolExhausted
 from repro.runtime.scheduler import Request, RequestState, Scheduler
 
 __all__ = [
     "BucketLattice",
     "BucketTable",
+    "PagePool",
+    "PagedKV",
+    "PoolExhausted",
     "Request",
     "RequestState",
     "Scheduler",

@@ -21,6 +21,12 @@ Two lattices:
   padded, so chunked prefill stays bit-identical to whole-prompt
   prefill; the distinct compiled chunk lengths are bounded by
   ``log2(max chunk)``.
+* **page counts** (paged runtime only) — a request's page-table length
+  rounds *up* to the next power of two (capped at the pages covering
+  ``max_len``), so paged gather/commit/decode views come in
+  ``log2(max pages)`` widths instead of one per live cache length.
+  Page tables pad to the lattice width with the null page, whose rows
+  only ever flow through exactly-zero masked attention probabilities.
 
 :class:`BucketTable` is the compile-once cache over those lattice
 points.  Every entry is built by tracing model code whose ``xeinsum``
@@ -75,7 +81,8 @@ class BucketLattice:
     """
 
     def __init__(self, slots: int, *, max_chunk: int = 64,
-                 chunked: bool = True, bucketed_decode: bool = True):
+                 chunked: bool = True, bucketed_decode: bool = True,
+                 max_pages: int | None = None):
         if max_chunk < 1:
             raise ValueError(f"max_chunk must be >= 1, got {max_chunk}")
         self.slots = int(slots)
@@ -86,6 +93,10 @@ class BucketLattice:
             pow2_buckets(self.slots) if bucketed_decode else (self.slots,)
         )
         self.chunk_buckets = pow2_buckets(self.max_chunk)
+        self.max_pages = int(max_pages) if max_pages else None
+        self.page_buckets = (
+            pow2_buckets(self.max_pages) if self.max_pages else ()
+        )
 
     def decode_bucket(self, n_active: int) -> int:
         """Smallest lattice point holding ``n_active`` slots."""
@@ -101,11 +112,23 @@ class BucketLattice:
             return int(remaining)  # exact-length single-shot prefill
         return max(c for c in self.chunk_buckets if c <= remaining)
 
+    def page_bucket(self, n_pages: int) -> int:
+        """Smallest page-count lattice point holding ``n_pages`` pages."""
+        if self.max_pages is None:
+            raise ValueError("lattice has no page buckets (unpaged runtime)")
+        if not 1 <= n_pages <= self.max_pages:
+            raise ValueError(
+                f"n_pages={n_pages} outside 1..{self.max_pages}")
+        return min(b for b in self.page_buckets if b >= n_pages)
+
     def describe(self) -> dict:
-        return {
+        out = {
             "slot_buckets": self.slot_buckets,
             "chunk_buckets": self.chunk_buckets if self.chunked else "exact",
         }
+        if self.max_pages is not None:
+            out["page_buckets"] = self.page_buckets
+        return out
 
 
 class BucketTable:
@@ -130,8 +153,15 @@ class BucketTable:
     def compiles(self) -> int:
         return len(self._entries)
 
-    def key(self, kind: str, size: int, fingerprint=None) -> tuple:
-        return (str(kind), int(size), fingerprint)
+    def key(self, kind: str, size, fingerprint=None) -> tuple:
+        """``size`` is one lattice point: an int, or a tuple of ints for
+        multi-axis lattices (the paged decode's (slot-bucket,
+        page-bucket) product)."""
+        if isinstance(size, tuple):
+            size = tuple(int(s) for s in size)
+        else:
+            size = int(size)
+        return (str(kind), size, fingerprint)
 
     def get(self, key: tuple, build):
         entry = self._entries.get(key)

@@ -18,6 +18,15 @@ package separates:
   slot count skips the gather entirely — the legacy step-locked graph,
   bit-identical to the old ``ServeEngine``).
 
+``paged=True`` swaps the per-slot contiguous caches for the block-pool
+allocator in :mod:`repro.runtime.pages`: KV lives in fixed-size pages,
+requests hold page tables, admission is keyed on free *pages* (a
+:class:`~repro.runtime.pages.PagePool` attached to the scheduler), and
+prompts whose leading chunks hash-match a resident prefix map those
+pages by refcount instead of recomputing them.  The decode/prefill
+graphs become page-table-indexed gather/scatter over one pooled cache
+tree, bucketed on a (slot-count × page-count) lattice.
+
 Correctness invariants the tests pin:
 
 * **greedy token identity** — chunked prefill slices the prompt exactly
@@ -53,8 +62,9 @@ from repro.models.transformer import decode_step, init_cache, prefill
 from repro.obs import trace as _trace
 from repro.runtime.buckets import BucketLattice, BucketTable, tuning_key_component
 from repro.runtime.metrics import ServingMetrics
+from repro.runtime.pages import NULL_PAGE, PagePool, PagedKV, PoolExhausted
 from repro.runtime.scheduler import (
-    EVICTED, PREFILL, UNFINISHED, Request, RequestState, Scheduler,
+    EVICTED, PREFILL, REJECTED, UNFINISHED, Request, RequestState, Scheduler,
 )
 
 __all__ = ["ServingRuntime", "supports_chunked_prefill"]
@@ -77,6 +87,8 @@ class ServingRuntime:
                  max_len: int = 1024, greedy: bool = True,
                  prefill_chunk: int = 64, chunked_prefill: bool | None = None,
                  bucketed_decode: bool = True,
+                 paged: bool = False, page_size: int = 16,
+                 pages: int | None = None, prefix_sharing: bool = True,
                  pretune: bool = False, tuner=None, tuning_cache=None,
                  pretune_prompt_lens: tuple[int, ...] = (8, 16, 32),
                  precompile: bool = True,
@@ -84,6 +96,16 @@ class ServingRuntime:
         """``chunked_prefill=None`` auto-detects
         (:func:`supports_chunked_prefill`); ``bucketed_decode=False`` +
         ``chunked_prefill=False`` is the legacy step-locked engine.
+
+        ``paged=True`` serves off a page pool of ``pages`` pages of
+        ``page_size`` token rows each (default: the null page plus
+        enough pages to match the unpaged runtime's ``slots × max_len``
+        rows).  Memory then caps concurrency by *pages held*, not slots:
+        ``slots`` may exceed what contiguous caches could hold, and
+        ``prefix_sharing`` maps hash-matching resident prompt prefixes
+        instead of recomputing them.  Requires a pure-attention stack
+        (the pool pages the token axis; SSM state has none) and is
+        single-device for now.
 
         ``mesh`` (a ``jax.sharding.Mesh``) serves *sharded*: params and
         the slot-stacked decode cache are partitioned by the model zoo's
@@ -107,13 +129,38 @@ class ServingRuntime:
                 f"would not match whole-prompt prefill (pass "
                 f"chunked_prefill=False)"
             )
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        self.pool: PagePool | None = None
+        self.kv: PagedKV | None = None
+        max_pages = None
+        if self.paged:
+            if mesh is not None:
+                raise NotImplementedError(
+                    "paged KV-cache does not serve sharded yet"
+                )
+            if not supports_chunked_prefill(cfg):
+                raise ValueError(
+                    f"{cfg.arch_id} has SSM/frontend layers: recurrent "
+                    f"state has no token axis and cannot be paged"
+                )
+            max_pages = -(-max_len // self.page_size)  # pages per request
+            if pages is None:
+                # null page + the unpaged runtime's slots*max_len rows
+                pages = slots * max_pages + 1
         self.lattice = BucketLattice(
             slots, max_chunk=prefill_chunk, chunked=chunked_prefill,
-            bucketed_decode=bucketed_decode,
+            bucketed_decode=bucketed_decode, max_pages=max_pages,
         )
-        self.scheduler = Scheduler(slots, self.lattice)
         self.buckets = BucketTable()
         self.metrics = ServingMetrics(slots, **({"clock": clock} if clock else {}))
+        if self.paged:
+            self.pool = PagePool(
+                pages, self.page_size, max_rows=max_len,
+                prefix_sharing=prefix_sharing, metrics=self.metrics,
+            )
+            self.kv = PagedKV(cfg, pages, self.page_size)
+        self.scheduler = Scheduler(slots, self.lattice, pool=self.pool)
 
         if mesh is not None:
             from repro.distributed.sharding import ShardingRules
@@ -125,12 +172,15 @@ class ServingRuntime:
             )
             p_sh = tree_shardings(self._rules, param_logical_axes(p_spec), p_spec)
             self.params = jax.device_put(params, p_sh)
-        # slot-stacked cache: every leaf gains a leading (slots,) axis, so
-        # each slot keeps an independent length/KV state.
-        one = init_cache(cfg, 1, max_len)
-        self.cache = jax.tree.map(
-            lambda x: jnp.zeros((slots,) + x.shape, x.dtype), one
-        )
+        if self.paged:
+            self.cache = None        # KV lives in self.kv.pool
+        else:
+            # slot-stacked cache: every leaf gains a leading (slots,)
+            # axis, so each slot keeps an independent length/KV state.
+            one = init_cache(cfg, 1, max_len)
+            self.cache = jax.tree.map(
+                lambda x: jnp.zeros((slots,) + x.shape, x.dtype), one
+            )
         if mesh is not None:
             from repro.launch.shardings import cache_logical_axes, tree_shardings
 
@@ -202,12 +252,25 @@ class ServingRuntime:
         )
         with self._mesh_ctx(), recorder() as rec:
             for b in self.lattice.slot_buckets:
-                sub = jax.tree.map(
-                    lambda x: jax.ShapeDtypeStruct((b,) + x.shape[1:], x.dtype),
-                    self.cache,
-                )
                 step = jnp.zeros((b, 1, 1), jnp.int32)
-                jax.eval_shape(decode, self.params, sub, step)
+                if self.paged:
+                    # paged decode runs on gathered views of every
+                    # page-lattice width, not on max_len slot rows
+                    for P in self.lattice.page_buckets:
+                        view = init_cache(self.cfg, 1, P * self.page_size)
+                        sub = jax.tree.map(
+                            lambda x: jax.ShapeDtypeStruct(
+                                (b,) + x.shape, x.dtype),
+                            view,
+                        )
+                        jax.eval_shape(decode, self.params, sub, step)
+                else:
+                    sub = jax.tree.map(
+                        lambda x: jax.ShapeDtypeStruct(
+                            (b,) + x.shape[1:], x.dtype),
+                        self.cache,
+                    )
+                    jax.eval_shape(decode, self.params, sub, step)
             for plen in dict.fromkeys(min(p, self.max_len) for p in prompt_lens):
                 toks = jnp.zeros((1, plen), jnp.int32)
                 jax.eval_shape(prefill_, self.params, toks, one)
@@ -255,6 +318,36 @@ class ServingRuntime:
             "calls": len(rec),
             "steps": sum(len(p.program.steps) for p in rec),
         }
+
+    def precompile_buckets(self) -> int:
+        """Create every bucket-table entry on the lattice up front.
+
+        Entries hold lazily-jitted callables (tracing happens on first
+        call), so this is cheap; what it pins is the *compile set*: after
+        it runs, ``BucketTable.compiles`` is frozen at the lattice size
+        and every serve-time lookup is a hit — the deterministic
+        zero-recompile steady state the multi-tenant benchmark asserts.
+        Returns the entry count."""
+        fp = self._fingerprint()
+        bk, bg = self.buckets.key, self.buckets.get
+        chunks = self.lattice.chunk_buckets if self.lattice.chunked else ()
+        if self.paged:
+            for P in self.lattice.page_buckets:
+                bg(bk("page_view", P, fp), lambda P=P: self.kv.build_view(P))
+                bg(bk("page_commit", P, fp),
+                   lambda P=P: self.kv.build_commit(P))
+                for c in chunks:
+                    bg(bk("prefill", (c, P), fp), self._build_prefill)
+                for b in self.lattice.slot_buckets:
+                    bg(bk("decode", (b, P), fp),
+                       lambda b=b, P=P: self.kv.build_decode(
+                           self._decode_vmapped, b, P))
+        else:
+            for b in self.lattice.slot_buckets:
+                bg(bk("decode", b, fp), lambda b=b: self._build_decode(b))
+            for c in chunks:
+                bg(bk("prefill", c, fp), self._build_prefill)
+        return self.buckets.compiles
 
     def warmup_tuning(self, *, tuner=None, tuning_cache=None,
                       prompt_lens: tuple[int, ...] = (8, 16, 32)) -> dict:
@@ -308,6 +401,27 @@ class ServingRuntime:
         return jax.jit(fn)
 
     # ------------------------------------------------------------ lifecycle
+    def _reject_reason(self, request: Request) -> str | None:
+        """Why a request could *never* be served, or ``None``.
+
+        One rule, two callers: :meth:`submit` raises on it (programming
+        error at the API), :meth:`serve` marks the offender ``rejected``
+        and serves the rest of the batch (operational input)."""
+        plen = len(request.prompt)
+        if plen > self.max_len:
+            return (
+                f"prompt of {plen} tokens exceeds max_len={self.max_len} "
+                f"(the KV cache cannot hold it)"
+            )
+        if self.pool is not None:
+            need = self.pool.required_pages(plen)
+            if need > self.pool.usable:
+                return (
+                    f"prompt needs {need} page(s) but the pool holds "
+                    f"only {self.pool.usable}"
+                )
+        return None
+
     def submit(self, request: Request) -> RequestState:
         """Queue a request (admitted when a slot frees up).
 
@@ -317,13 +431,12 @@ class ServingRuntime:
         silently overwriting earlier KV rows and emitting a first token
         from corrupted state.  (A prompt of exactly ``max_len`` is fine:
         the first token comes from the prefill logits, and the decode
-        cache-length cap evicts before any out-of-range write.)"""
-        if len(request.prompt) > self.max_len:
-            raise ValueError(
-                f"request {request.rid}: prompt of {len(request.prompt)} "
-                f"tokens exceeds max_len={self.max_len} (the KV cache "
-                f"cannot hold it)"
-            )
+        cache-length cap evicts before any out-of-range write.)  The
+        paged runtime also rejects prompts whose page table could never
+        fit the pool."""
+        reason = self._reject_reason(request)
+        if reason is not None:
+            raise ValueError(f"request {request.rid}: {reason}")
         state = self.scheduler.submit(request)
         self.metrics.on_submit(request.rid)
         if _trace.enabled():
@@ -348,8 +461,9 @@ class ServingRuntime:
         :class:`repro.obs.registry.MetricsRegistry` (default: the
         process-wide one) under the conventional source names:
         ``serving`` (request/token/latency metrics), ``buckets``
-        (compile-once table), ``programs`` (process program cache) and —
-        when a tuner is attached — ``dispatcher``.  Returns the registry.
+        (compile-once table), ``programs`` (process program cache),
+        ``pages`` (page-pool occupancy, paged runtime only) and — when a
+        tuner is attached — ``dispatcher``.  Returns the registry.
 
         Explicit, not automatic: constructing a runtime must not mutate
         process-global state behind a test's back."""
@@ -360,6 +474,8 @@ class ServingRuntime:
         reg.register("serving", self.metrics.snapshot)
         reg.register("buckets", self.buckets.stats)
         reg.register("programs", program_cache_stats)
+        if self.pool is not None:
+            reg.register("pages", self.pool.stats)
         if self.tuner is not None:
             reg.register("dispatcher", lambda: self.tuner.stats)
         return reg
@@ -382,12 +498,21 @@ class ServingRuntime:
 
     def _run_prefill_chunk_impl(self, state: RequestState, chunk: int) -> None:
         if state.cache is None:
-            state.cache = init_cache(self.cfg, 1, self.max_len)
+            if self.paged:
+                # gather the request's pages into a dense staging cache;
+                # a shared prefix arrives pre-filled and prefill resumes
+                # after it (state.pos started at shared_tokens)
+                state.cache = self._page_stage(state)
+            else:
+                state.cache = init_cache(self.cfg, 1, self.max_len)
         toks = jnp.asarray(
             np.asarray(state.request.prompt[state.pos:state.pos + chunk],
                        np.int32)[None]
         )
-        key = self.buckets.key("prefill", chunk, self._fingerprint())
+        # paged staging caches come in page-lattice widths, so the
+        # compiled prefill is keyed on (chunk, width) lattice points
+        size = (chunk, self._page_width(state)) if self.paged else chunk
+        key = self.buckets.key("prefill", size, self._fingerprint())
         fn = self.buckets.get(key, self._build_prefill)
         with self._mesh_ctx():
             logits, state.cache = fn(self.params, toks, state.cache)
@@ -397,13 +522,84 @@ class ServingRuntime:
             first = self._sample(state, logits[0])
             state.request.output.append(first)
             self._tokens[state.slot, 0, 0] = first
-            with self._mesh_ctx():
-                self.cache = _write_slot(self.cache, state.cache, state.slot)
+            if self.paged:
+                self._page_commit(state)
+            else:
+                with self._mesh_ctx():
+                    self.cache = _write_slot(
+                        self.cache, state.cache, state.slot
+                    )
             self.scheduler.prefill_done(state)
             self.metrics.on_first_token(state.rid)
             if _trace.enabled():
                 _trace.instant("first_token", "runtime", rid=state.rid)
             self._maybe_finish(state)
+
+    # ------------------------------------------------------- paged plumbing
+    def _page_width(self, state: RequestState) -> int:
+        """The page-lattice point covering ``state``'s page table."""
+        return self.lattice.page_bucket(len(state.pages))
+
+    def _page_table(self, state: RequestState, P: int) -> np.ndarray:
+        """``state``'s page table padded to lattice width ``P`` with the
+        null page (whose rows only flow through exactly-zero masked
+        attention probabilities)."""
+        t = np.full((P,), NULL_PAGE, np.int32)
+        t[:len(state.pages)] = state.pages
+        return t
+
+    def _page_stage(self, state: RequestState):
+        """Batch-1 prefill staging cache: the request's pages gathered
+        dense (``P * page_size`` rows), cache length = shared prefix."""
+        P = self._page_width(state)
+        key = self.buckets.key("page_view", P, self._fingerprint())
+        fn = self.buckets.get(key, lambda: self.kv.build_view(P))
+        table = jnp.asarray(self._page_table(state, P)[None])
+        length = jnp.full((1,), state.shared_tokens, jnp.int32)
+        return fn(self.kv.pool, table, length)
+
+    def _page_commit(self, state: RequestState) -> None:
+        """Scatter a finished prefill's staging cache back into its
+        pages and publish the full prompt pages to the prefix index.
+        Re-writing a shared page is bit-idempotent: its staged rows were
+        gathered from that very page and prefill never touched them."""
+        P = self._page_width(state)
+        key = self.buckets.key("page_commit", P, self._fingerprint())
+        fn = self.buckets.get(key, lambda: self.kv.build_commit(P))
+        pages = jnp.asarray(self._page_table(state, P))
+        self.kv.pool = fn(self.kv.pool, state.cache, pages)
+        self.pool.register(state)
+
+    def _ensure_decode_capacity(self, decodes: list[RequestState]) -> None:
+        """Grow page tables for this decode step, preempting on pressure.
+
+        The step for request ``s`` writes cache row ``prompt_len +
+        n_generated - 1``, so its table must cover ``prompt_len +
+        n_generated`` rows.  When the pool is dry the *youngest* other
+        decoding request (highest rid) is evicted — marked, its pages
+        released — and the allocation retried; a request alone in the
+        batch evicts itself."""
+        for state in list(decodes):
+            if state not in decodes:
+                continue         # already preempted as a victim below
+            need = self.pool.pages_for(state.prompt_len + state.n_generated)
+            while len(state.pages) < need:
+                try:
+                    state.pages += self.pool.alloc(
+                        need - len(state.pages), rid=state.rid
+                    )
+                except PoolExhausted:
+                    others = [s for s in decodes if s is not state]
+                    victim = (max(others, key=lambda s: s.rid) if others
+                              else state)
+                    self.scheduler.finish(victim, EVICTED)
+                    self.metrics.on_evict(victim.rid)
+                    if _trace.enabled():
+                        _trace.instant("evict", "runtime", rid=victim.rid,
+                                       reason="pool_exhausted")
+                    decodes.remove(victim)
+                    if victim is state:
+                        break
 
     def _maybe_finish(self, state: RequestState) -> None:
         if state.n_generated >= state.request.max_new_tokens:
@@ -434,6 +630,11 @@ class ServingRuntime:
             self._run_decode_impl(decodes)
 
     def _run_decode_impl(self, decodes: list[RequestState]) -> None:
+        if self.paged:
+            self._ensure_decode_capacity(decodes)
+            if decodes:
+                self._run_decode_paged(decodes)
+            return
         n = len(decodes)
         bucket = self.lattice.decode_bucket(n)
         key = self.buckets.key("decode", bucket, self._fingerprint())
@@ -465,6 +666,48 @@ class ServingRuntime:
             self.metrics.on_token()
             self._maybe_finish(state)
 
+    def _run_decode_paged(self, decodes: list[RequestState]) -> None:
+        """One decode step over page tables: gather each request's pages
+        into a view, step, scatter the one written KV row back.  The
+        executable is keyed on the (slot-bucket, page-bucket) lattice
+        point; the batch pads with full duplicates of request 0's
+        (table, length, token) row, so the padded rows compute — and
+        scatter — identical values."""
+        n = len(decodes)
+        bucket = self.lattice.decode_bucket(n)
+        P = self.lattice.page_bucket(max(len(s.pages) for s in decodes))
+        key = self.buckets.key("decode", (bucket, P), self._fingerprint())
+        fn = self.buckets.get(
+            key,
+            lambda: self.kv.build_decode(self._decode_vmapped, bucket, P),
+        )
+        tables = np.stack([self._page_table(s, P) for s in decodes])
+        lengths = np.asarray(
+            [s.prompt_len + s.n_generated - 1 for s in decodes], np.int32
+        )
+        toks = self._tokens[[s.slot for s in decodes]]
+        if bucket > n:
+            pad = bucket - n
+            tables = np.concatenate([tables, np.repeat(tables[:1], pad, 0)])
+            lengths = np.concatenate([lengths, np.repeat(lengths[:1], pad)])
+            toks = np.concatenate([toks, np.repeat(toks[:1], pad, 0)])
+        logits, self.kv.pool = fn(
+            self.params, self.kv.pool, jnp.asarray(tables),
+            jnp.asarray(lengths), jnp.asarray(toks),
+        )
+        self.metrics.on_decode(n, bucket)
+        if self.greedy:
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            out = [int(nxt[r]) for r in range(n)]
+        else:
+            out = [self._sample(s, logits[r, 0])
+                   for r, s in enumerate(decodes)]
+        for state, tok in zip(decodes, out):
+            state.request.output.append(tok)
+            self._tokens[state.slot, 0, 0] = tok
+            self.metrics.on_token()
+            self._maybe_finish(state)
+
     def tick(self) -> None:
         """One scheduler round: admissions → prefill chunks → decode.
 
@@ -490,6 +733,8 @@ class ServingRuntime:
             # requests reads as busy
             engaged.update(s.rid for s in batch)
             self.metrics.on_tick(len(engaged))
+            if self.pool is not None:
+                self.metrics.on_pool_gauge(self.pool.n_free, self.pool.usable)
             if sp:
                 sp.set(n_prefills=len(plan.prefills), n_decode=len(batch),
                        engaged=sorted(engaged))
@@ -501,6 +746,8 @@ class ServingRuntime:
         contract."""
         if self.scheduler.n_free == 0 or self.scheduler.queue:
             return False
+        if self.pool is not None and not self.pool.can_admit(request.prompt):
+            return False         # paged: pool cannot hold the prompt now
         self.submit(request)
         state = self.scheduler.admit_next()
         while state.request.status == PREFILL:
@@ -518,9 +765,30 @@ class ServingRuntime:
         ``RuntimeWarning`` is emitted — never silently returned as if
         complete.  ``tick_callback``, when given, is invoked as
         ``tick_callback(step)`` after every tick (the launcher's
-        periodic metrics printout hangs off it)."""
+        periodic metrics printout hangs off it).
+
+        The whole batch is validated *before* anything queues: an
+        unservable request (over-long prompt) is marked
+        ``status="rejected"`` with a ``RuntimeWarning`` and the rest of
+        the list is served — submitting one at a time used to abandon
+        the half-submitted batch when a mid-list prompt raised."""
         for r in requests:
-            self.submit(r)
+            reason = self._reject_reason(r)
+            if reason is None:
+                continue
+            r.status = REJECTED
+            r.done = False
+            self.metrics.on_reject(r.rid)
+            if _trace.enabled():
+                _trace.instant("reject", "runtime", rid=r.rid)
+            warnings.warn(
+                f"request {r.rid} rejected (not served): {reason}",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        for r in requests:
+            if r.status != REJECTED:
+                self.submit(r)
         self.metrics.start()
         steps = 0
         while self.scheduler.has_work() and steps < max_steps:

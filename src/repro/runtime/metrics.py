@@ -52,7 +52,18 @@ class ServingMetrics:
         self.decode_calls = 0
         self.ticks = 0
         self.evictions = 0
+        self.rejections = 0        # refused at submit (e.g. over-long prompt)
         self.stray_events = 0      # out-of-order request events, dropped
+        self.peak_engaged = 0      # max requests doing work in one tick
+        # paged-runtime counters (stay zero on the unpaged path)
+        self.pages_allocated = 0
+        self.pages_released = 0
+        self.prefix_hits = 0
+        self.prefix_shared_pages = 0
+        self.prefix_shared_tokens = 0
+        self._pool_free_min: int | None = None   # high-water memory pressure
+        self._pool_used = 0.0      # Σ used fraction over gauge samples
+        self._pool_samples = 0
         self._active_rows = 0      # Σ active slots over decode calls
         self._bucket_rows = 0      # Σ bucket rows over decode calls
         self._occupancy = 0.0      # Σ (active / slots) over ticks
@@ -106,6 +117,12 @@ class ServingMetrics:
         self._submit.pop(rid, None)
         self._first.pop(rid, None)
 
+    def on_reject(self, rid: int) -> None:
+        """A request refused before it ever queued (no submit record
+        expected — rejection happens instead of submission)."""
+        self.rejections += 1
+        self._submit.pop(rid, None)
+
     def on_unfinished(self, rid: int) -> None:
         """Drop a request that ended without completing (max_steps
         exhaustion): no latency sample, no leaked submit timestamp."""
@@ -128,6 +145,29 @@ class ServingMetrics:
     def on_tick(self, n_active: int) -> None:
         self.ticks += 1
         self._occupancy += n_active / self.slots
+        if n_active > self.peak_engaged:
+            self.peak_engaged = n_active
+
+    # ----------------------------------------------------- page-pool events
+    def on_page_alloc(self, n: int) -> None:
+        self.pages_allocated += int(n)
+
+    def on_page_release(self, n: int) -> None:
+        self.pages_released += int(n)
+
+    def on_prefix_hit(self, n_pages: int, n_tokens: int) -> None:
+        self.prefix_hits += 1
+        self.prefix_shared_pages += int(n_pages)
+        self.prefix_shared_tokens += int(n_tokens)
+
+    def on_pool_gauge(self, free: int, total: int) -> None:
+        """Sample pool occupancy (called once per tick by the engine)."""
+        free, total = int(free), int(total)
+        if self._pool_free_min is None or free < self._pool_free_min:
+            self._pool_free_min = free
+        if total > 0:
+            self._pool_used += (total - free) / total
+            self._pool_samples += 1
 
     # -------------------------------------------------------------- summary
     def snapshot(self, bucket_table=None) -> dict:
@@ -141,7 +181,20 @@ class ServingMetrics:
             "decode_calls": self.decode_calls,
             "ticks": self.ticks,
             "evictions": self.evictions,
+            "rejections": self.rejections,
             "stray_events": self.stray_events,
+            "pages_allocated": self.pages_allocated,
+            "pages_released": self.pages_released,
+            "prefix_hits": self.prefix_hits,
+            "prefix_shared_pages": self.prefix_shared_pages,
+            "prefix_shared_tokens": self.prefix_shared_tokens,
+            "pool_free_min": (
+                -1 if self._pool_free_min is None else self._pool_free_min
+            ),
+            "pool_used_frac": (
+                self._pool_used / self._pool_samples if self._pool_samples
+                else 0.0
+            ),
             "requests_done": len(self._latency),
             "wall_s": wall,
             "throughput_tok_s": self.tokens_out / wall if wall > 0 else 0.0,
@@ -149,6 +202,7 @@ class ServingMetrics:
             "p99_latency_s": _pct(self._latency, 99),
             "p50_ttft_s": _pct(self._ttft, 50),
             "p99_ttft_s": _pct(self._ttft, 99),
+            "peak_engaged": self.peak_engaged,
             "slot_occupancy": self._occupancy / self.ticks if self.ticks else 0.0,
             "decode_efficiency": (
                 self._active_rows / self._bucket_rows if self._bucket_rows

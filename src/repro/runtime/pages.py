@@ -1,0 +1,440 @@
+"""Paged KV-cache: a block-pool allocator with content-hash prefix reuse.
+
+The runtime used to give every slot a contiguous ``max_len`` cache, so
+device memory — not compute — capped concurrency.  This module replaces
+slot caches with a **page pool**: KV state lives in fixed-size pages of
+``page_size`` token rows, requests hold *page tables* (lists of page
+ids), and the engine's existing gather/scatter becomes page-table
+indexed.  This is exactly the source paper's pointer-interface case —
+decode over scattered pages is a batch of contractions at
+non-contiguous strided addresses, the situation the extended
+StridedBatchedGEMM interface is designed to absorb — and the
+page-count *bucket lattice* (Peise-style shape classes in
+:mod:`repro.runtime.buckets`) keeps the paged compile set bounded.
+
+Two halves, mirroring the scheduler/engine split:
+
+* :class:`PagePool` — pure host-side bookkeeping: free list, per-page
+  refcounts, and the **prefix index**: a chain hash per *full* prompt
+  page (digest of all tokens up to and including that page), mapping to
+  the resident page holding those rows.  A new prompt whose leading
+  full pages hash-match maps them into its page table with a refcount
+  bump — no prefill recompute; common system prompts prefill once and
+  fork.  Shared pages are *full* pages: writes only ever happen at the
+  growing tail, so a full page is immutable and sharing needs no
+  copy-on-write fault path.  Eviction is page release — refcounts drop,
+  pages return to the free list at zero (and leave the prefix index).
+* :class:`PagedKV` — the device half: one pooled cache tree (every
+  leaf's token axis re-cut into ``(n_pages, page_size)``) plus the
+  jitted gather/commit/decode builders the engine caches per bucket
+  lattice point.
+
+**Page 0 is the null page.**  Gather and commit pad their page tables
+to the lattice width with it; whatever lands there is only ever read
+through positions the attention mask zeroes exactly, so the padding is
+value-safe without per-request branches.
+
+Correctness invariant (pinned by the differential tests): greedy
+output is token-identical to the unpaged runtime.  The gathered view
+is shorter than ``max_len`` but masked positions carry exactly-zero
+probabilities, and a shared prefix page holds bit-identical KV to what
+prefill would recompute (same tokens, same absolute positions, same
+params).
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+from repro.obs import trace as _trace
+
+__all__ = ["NULL_PAGE", "PagePool", "PagedKV", "PoolExhausted"]
+
+#: reserved scratch page: pads page tables up to the lattice width.
+NULL_PAGE = 0
+
+
+class PoolExhausted(RuntimeError):
+    """No free page — the caller decides who to preempt."""
+
+
+# =========================================================== host bookkeeping
+class PagePool:
+    """Free list + refcounts + prefix index for a pool of KV pages.
+
+    ``n_pages`` counts the whole pool including the reserved null page,
+    so ``usable == n_pages - 1``.  ``max_rows`` caps how many cache rows
+    one request may ever hold (the engine passes ``max_len``).
+    ``metrics``, when given, is a
+    :class:`repro.runtime.metrics.ServingMetrics` that receives
+    ``on_page_alloc`` / ``on_page_release`` / ``on_prefix_hit`` events.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, *,
+                 max_rows: int | None = None, prefix_sharing: bool = True,
+                 metrics=None):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if n_pages < 2:
+            raise ValueError(
+                f"pool needs the null page plus at least one usable page, "
+                f"got n_pages={n_pages}"
+            )
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.max_rows = (int(max_rows) if max_rows is not None
+                         else (self.n_pages - 1) * self.page_size)
+        self.prefix_sharing = bool(prefix_sharing)
+        self.metrics = metrics
+        # LIFO free list (recently-released pages are cache-warm); the
+        # null page is never in it
+        self._free = list(range(self.n_pages - 1, NULL_PAGE, -1))
+        self.refcount: dict[int, int] = {}     # allocated pages only
+        self._hash_to_page: dict[str, int] = {}
+        self._page_hash: dict[int, str] = {}
+        # counters (also surfaced via stats())
+        self.page_allocs = 0
+        self.page_releases = 0
+        self.prefix_hits = 0
+        self.prefix_shared_pages = 0
+        self.prefix_shared_tokens = 0
+        self.admission_blocks = 0
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def usable(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, rows: int) -> int:
+        """Pages needed to hold ``rows`` cache rows."""
+        return -(-int(rows) // self.page_size)
+
+    def required_pages(self, prompt_len: int) -> int:
+        """Pages a request must hold at admission: the prompt plus the
+        first decode row (capped at ``max_rows`` — a prompt of exactly
+        ``max_rows`` is legal, the cache-length cap evicts before any
+        out-of-range write)."""
+        return self.pages_for(min(int(prompt_len) + 1, self.max_rows))
+
+    # ------------------------------------------------------------ alloc/free
+    def alloc(self, n: int, *, rid: int | None = None) -> list[int]:
+        """Pop ``n`` fresh pages (refcount 1 each), or raise
+        :class:`PoolExhausted` without allocating any."""
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"need {n} page(s), {len(self._free)} free "
+                f"(pool of {self.usable})"
+            )
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self.refcount[p] = 1
+        self.page_allocs += n
+        if self.metrics is not None:
+            self.metrics.on_page_alloc(n)
+        if n and _trace.enabled():
+            _trace.instant("page_alloc", "pages", rid=rid, n=n,
+                           free=len(self._free))
+        return pages
+
+    def release(self, pages: list[int], *, rid: int | None = None) -> int:
+        """Drop one reference per page; pages hitting refcount zero
+        return to the free list and leave the prefix index.  Returns the
+        number of pages actually freed."""
+        freed = 0
+        for p in pages:
+            rc = self.refcount[p] - 1
+            if rc:
+                self.refcount[p] = rc
+                continue
+            del self.refcount[p]
+            h = self._page_hash.pop(p, None)
+            if h is not None and self._hash_to_page.get(h) == p:
+                del self._hash_to_page[h]
+            self._free.append(p)
+            freed += 1
+        self.page_releases += freed
+        if self.metrics is not None and freed:
+            self.metrics.on_page_release(freed)
+        if pages and _trace.enabled():
+            _trace.instant("page_release", "pages", rid=rid, n=len(pages),
+                           freed=freed, free=len(self._free))
+        return freed
+
+    # --------------------------------------------------------- prefix index
+    def _chain_hashes(self, prompt) -> list[str]:
+        """One digest per *full* prompt page; digest ``i`` covers every
+        token up to and including page ``i`` (chain hashing), so a hash
+        match implies the whole leading prefix matches."""
+        arr = np.ascontiguousarray(np.asarray(prompt, np.int32))
+        h = hashlib.sha256()
+        out = []
+        for i in range(len(arr) // self.page_size):
+            h.update(arr[i * self.page_size:(i + 1) * self.page_size].tobytes())
+            out.append(h.hexdigest())
+        return out
+
+    def match_prefix(self, hashes: list[str], prompt_len: int) -> list[int]:
+        """Resident pages matching the prompt's leading full pages.
+
+        Capped so at least one prompt token is left to prefill: the
+        first token's logits come from the prefill of the un-shared
+        remainder, so a fully-resident prompt still prefills its last
+        page."""
+        if not self.prefix_sharing:
+            return []
+        shareable = (int(prompt_len) - 1) // self.page_size
+        pages = []
+        for h in hashes[:shareable]:
+            p = self._hash_to_page.get(h)
+            if p is None:
+                break
+            pages.append(p)
+        return pages
+
+    def can_admit(self, prompt) -> bool:
+        """Would :meth:`try_admit` succeed right now?  Pure inspection —
+        nothing is allocated and no counter moves (``admit_now`` uses it
+        to refuse before enqueueing)."""
+        plen = len(prompt)
+        hashes = self._chain_hashes(prompt) if self.prefix_sharing else []
+        shared = self.match_prefix(hashes, plen)
+        return self.required_pages(plen) - len(shared) <= self.n_free
+
+    def try_admit(self, state) -> bool:
+        """Reserve pages for a request at admission, sharing what it can.
+
+        Maps hash-matching resident prefix pages into ``state.pages``
+        (refcount bump, zero recompute), allocates private pages for the
+        remainder of ``prompt_len + 1`` rows, and records the chain
+        hashes for :meth:`register` at prefill commit.  Returns False —
+        allocating nothing — when the pool lacks the private pages."""
+        prompt = state.request.prompt
+        plen = len(prompt)
+        hashes = self._chain_hashes(prompt) if self.prefix_sharing else []
+        shared = self.match_prefix(hashes, plen)
+        need = self.required_pages(plen) - len(shared)
+        if need > self.n_free:
+            self.admission_blocks += 1
+            return False
+        for p in shared:
+            self.refcount[p] += 1
+        state.pages = shared + self.alloc(need, rid=state.rid)
+        state.shared_tokens = len(shared) * self.page_size
+        state.page_hashes = hashes
+        if shared:
+            self.prefix_hits += 1
+            self.prefix_shared_pages += len(shared)
+            self.prefix_shared_tokens += state.shared_tokens
+            if self.metrics is not None:
+                self.metrics.on_prefix_hit(len(shared), state.shared_tokens)
+            if _trace.enabled():
+                _trace.instant("page_share", "pages", rid=state.rid,
+                               n=len(shared), tokens=state.shared_tokens)
+        return True
+
+    def register(self, state) -> None:
+        """Publish a request's *full prompt pages* into the prefix index
+        (called once, when its prefill commits).  Full prompt pages are
+        immutable — decode writes land at row ``prompt_len`` and beyond
+        — so later prompts may map them directly.
+
+        A hash already indexed is *re-pointed* at the newer copy: two
+        requests admitted in the same tick prefill the same prefix into
+        private pages (neither could share — the index fills at commit,
+        after both were admitted), and if the older copy kept the index
+        entry, its release would empty the index while the newer copy
+        sat resident and unfindable.  Latest-registrant-wins keeps the
+        entry on the page most likely to outlive it; the release guard
+        (`_hash_to_page.get(h) == p`) makes the de-indexed older copy's
+        retirement a no-op on the index."""
+        if not self.prefix_sharing:
+            return
+        n_full = len(state.request.prompt) // self.page_size
+        for h, p in zip(state.page_hashes[:n_full], state.pages):
+            old = self._hash_to_page.get(h)
+            if old == p:
+                continue
+            self._hash_to_page[h] = p
+            self._page_hash[p] = h
+            if old is not None and self._page_hash.get(old) == h:
+                del self._page_hash[old]
+
+    # -------------------------------------------------------------- summary
+    def stats(self) -> dict:
+        """Flat counters for the metrics registry (``pages`` source)."""
+        used = self.usable - self.n_free
+        return {
+            "page_size": self.page_size,
+            "pages_total": self.usable,
+            "pages_free": self.n_free,
+            "pages_in_use": used,
+            "pool_occupancy": used / self.usable if self.usable else 0.0,
+            "page_allocs": self.page_allocs,
+            "page_releases": self.page_releases,
+            "prefix_hits": self.prefix_hits,
+            "prefix_shared_pages": self.prefix_shared_pages,
+            "prefix_shared_tokens": self.prefix_shared_tokens,
+            "prefix_index_size": len(self._hash_to_page),
+            "admission_blocks": self.admission_blocks,
+        }
+
+
+# ============================================================== device half
+def _leaf_token_axis(a, b):
+    """Token axis of one cache leaf, found by differencing the shapes of
+    two ``init_cache`` widths; ``-1`` marks a length leaf (no token
+    axis).  Raises for state that cannot be paged (SSM recurrent state
+    has no token axis and is not a length scalar)."""
+    diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+    if not diffs:
+        import jax.numpy as jnp
+
+        if jnp.issubdtype(a.dtype, jnp.integer) and a.ndim <= 1:
+            return -1  # per-layer / top-level "length" scalar
+        raise ValueError(
+            f"cache leaf of shape {a.shape} has no token axis — "
+            f"SSM/hybrid recurrent state cannot be paged"
+        )
+    if len(diffs) != 1:
+        raise ValueError(f"ambiguous token axis for leaf {a.shape}/{b.shape}")
+    return diffs[0]
+
+
+class PagedKV:
+    """The pooled device cache and its jitted gather/commit/decode ops.
+
+    ``pool`` is the cache tree of ``init_cache(cfg, 1, page_size)`` with
+    every leaf stacked to a leading ``(n_pages,)`` axis — each page is a
+    ``page_size``-row slice of every layer's KV at once, so one page
+    table describes a request's whole cache.  The builders return jitted
+    callables the engine caches in its :class:`~repro.runtime.buckets.
+    BucketTable` keyed by the page-count lattice point ``P`` (views are
+    ``P * page_size`` rows wide), keeping the compile set bounded.
+    """
+
+    def __init__(self, cfg, n_pages: int, page_size: int, dtype=None):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.transformer import init_cache
+
+        self.cfg = cfg
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        one = init_cache(cfg, 1, page_size, dtype)
+        two = init_cache(cfg, 1, 2 * page_size, dtype)
+        #: token-axis per leaf (in batch-1 leaf coordinates), -1 = length
+        self.axes = jax.tree.map(_leaf_token_axis, one, two)
+        self.pool = jax.tree.map(
+            lambda x: jnp.zeros((self.n_pages,) + x.shape, x.dtype), one
+        )
+
+    # -------------------------------------------------------------- weights
+    def _gather(self, pool, tables, lengths):
+        """Materialize per-request cache views from page tables.
+
+        ``tables``: (B, P) page ids (null-padded); ``lengths``: (B,)
+        cache lengths.  Returns a cache tree of batch views whose token
+        axes are ``P * page_size`` wide; length leaves broadcast
+        ``lengths``."""
+        import jax
+        import jax.numpy as jnp
+
+        B = tables.shape[0]
+
+        def g(leaf, ax):
+            base = leaf.shape[1:]
+            if ax < 0:
+                return jnp.broadcast_to(
+                    lengths.reshape((B,) + (1,) * len(base)), (B,) + base
+                ).astype(leaf.dtype)
+            x = leaf[tables]                      # (B, P) + base
+            x = jnp.moveaxis(x, 1, 1 + ax)        # page axis next to its rows
+            shp = (x.shape[:1 + ax]
+                   + (x.shape[1 + ax] * x.shape[2 + ax],)
+                   + x.shape[3 + ax:])
+            return x.reshape(shp)
+
+        return jax.tree.map(g, pool, self.axes)
+
+    def build_view(self, P: int):
+        """Jitted batch-1 view builder (prefill staging): maps a
+        request's pages (+ shared-prefix length) into a dense cache of
+        ``P * page_size`` rows, squeezed to the batch-1 tree
+        ``prefill`` expects."""
+        import jax
+
+        def fn(pool, table, length):
+            view = self._gather(pool, table, length)
+            return jax.tree.map(lambda x: x[0], view)
+
+        return jax.jit(fn)
+
+    def build_commit(self, P: int):
+        """Jitted prefill commit: re-cut a staged batch-1 cache of
+        ``P * page_size`` rows into pages and scatter them into the
+        pool at ``pages`` (null-padded to P).  Writing a shared page is
+        bit-idempotent — the staged rows were gathered from it."""
+        import jax
+        import jax.numpy as jnp
+
+        ps = self.page_size
+
+        def fn(pool, stage, pages):
+            def c(pool_leaf, stage_leaf, ax):
+                if ax < 0:
+                    return pool_leaf          # lengths live host-side
+                sm = jnp.moveaxis(stage_leaf, ax, 0)            # (W, ...)
+                sm = sm.reshape((P, ps) + sm.shape[1:])
+                pm = jnp.moveaxis(pool_leaf, 1 + ax, 1)         # (N, ps, ...)
+                pm = pm.at[pages].set(sm.astype(pm.dtype))
+                return jnp.moveaxis(pm, 1, 1 + ax)
+
+            return jax.tree.map(c, pool, stage, self.axes)
+
+        return jax.jit(fn)
+
+    def build_decode(self, decode_vmapped, bucket: int, P: int):
+        """Jitted paged decode for one ``(slot-bucket, page-bucket)``
+        lattice point: gather views, run the vmapped step, scatter the
+        single written row of every leaf back into its page.
+
+        The engine pads the batch to ``bucket`` by duplicating an
+        active request's (table, length, token) row — duplicates
+        compute identical updates, so the row scatter is
+        value-deterministic (same rule as the unpaged slot scatter)."""
+        import jax
+        import jax.numpy as jnp
+
+        ps = self.page_size
+
+        def fn(params, pool, tables, lengths, toks):
+            view = self._gather(pool, tables, lengths)
+            logits, new_view = decode_vmapped(params, view, toks)
+
+            def s(pool_leaf, new_leaf, ax):
+                if ax < 0:
+                    return pool_leaf
+                B = lengths.shape[0]
+                sel = lengths.reshape((B,) + (1,) * (new_leaf.ndim - 1))
+                row = jnp.take_along_axis(new_leaf, sel, axis=1 + ax)
+                pages = jnp.take_along_axis(
+                    tables, (lengths // ps)[:, None], axis=1)[:, 0]
+                # flatten (page, row-in-page) into global rows to scatter
+                pm = jnp.moveaxis(pool_leaf, 1 + ax, 1)
+                flat = pm.reshape((pm.shape[0] * pm.shape[1],) + pm.shape[2:])
+                rowm = jnp.moveaxis(row, 1 + ax, 1)[:, 0]
+                flat = flat.at[pages * ps + lengths % ps].set(
+                    rowm.astype(flat.dtype))
+                return jnp.moveaxis(flat.reshape(pm.shape), 1, 1 + ax)
+
+            new_pool = jax.tree.map(s, pool, new_view, self.axes)
+            return logits, new_pool
+
+        return jax.jit(fn)

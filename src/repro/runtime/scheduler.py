@@ -14,7 +14,15 @@ admitted or evicted) and leaves *how* to the engine.  Design rules:
   engine sampled only the first token and silently argmaxed the rest).
 * **Eviction** — a slot can be reclaimed at any time (explicit
   ``evict`` or the engine's cache-length cap); the request is marked,
-  never silently dropped.
+  never silently dropped.  Cancelling a request that is still *queued*
+  (no slot yet) is eviction too: it leaves the queue marked
+  ``evicted``.
+* **Paged admission** — with a :class:`repro.runtime.pages.PagePool`
+  attached, admission is keyed on free *pages*, not free slots alone:
+  the head-of-line request admits only when the pool can reserve its
+  page table (prompt + first decode row, minus whatever prefix it
+  shares).  Releasing a request's slot releases its pages in the same
+  breath, so page lifetime is exactly slot lifetime.
 """
 
 from __future__ import annotations
@@ -30,8 +38,9 @@ from repro.obs import trace as _trace
 __all__ = ["Request", "RequestState", "Scheduler", "TickPlan"]
 
 #: request lifecycle states (``Request.status``).
-QUEUED, PREFILL, DECODE, DONE, EVICTED, UNFINISHED = (
+QUEUED, PREFILL, DECODE, DONE, EVICTED, UNFINISHED, REJECTED = (
     "queued", "prefill", "decode", "done", "evicted", "unfinished",
+    "rejected",
 )
 
 
@@ -49,7 +58,8 @@ class Request:
 class RequestState:
     """Engine-side bookkeeping for one live request."""
 
-    __slots__ = ("request", "slot", "pos", "cache", "key")
+    __slots__ = ("request", "slot", "pos", "cache", "key",
+                 "pages", "shared_tokens", "page_hashes")
 
     def __init__(self, request: Request, *, seed: int | None = None):
         self.request = request
@@ -59,6 +69,10 @@ class RequestState:
         self.key = jax.random.PRNGKey(
             request.rid if seed is None else seed
         )
+        # paged-runtime state (set by PagePool.try_admit at admission)
+        self.pages: list[int] = []   # page table, shared prefix first
+        self.shared_tokens = 0       # leading rows mapped from the prefix index
+        self.page_hashes: list[str] = []
 
     @property
     def rid(self) -> int:
@@ -100,9 +114,10 @@ class TickPlan:
 
 
 class Scheduler:
-    def __init__(self, slots: int, lattice):
+    def __init__(self, slots: int, lattice, pool=None):
         self.slots = int(slots)
         self.lattice = lattice
+        self.pool = pool             # PagePool | None — paged admission
         self.queue: collections.deque[RequestState] = collections.deque()
         self.active: dict[int, RequestState] = {}    # slot -> state
         self._free = list(range(self.slots))
@@ -117,17 +132,26 @@ class Scheduler:
         return state
 
     def admit_next(self) -> RequestState | None:
-        """Bind the oldest queued request to a free slot, if any."""
+        """Bind the oldest queued request to a free slot, if any.
+
+        With a page pool attached, the head-of-line request must also
+        reserve its page table — FIFO order is preserved, so a blocked
+        head blocks admission (no small-request overtaking that would
+        starve long prompts)."""
         if not self._free or not self.queue:
+            return None
+        if self.pool is not None and not self.pool.try_admit(self.queue[0]):
             return None
         state = self.queue.popleft()
         state.slot = self._free.pop()
+        state.pos = state.shared_tokens  # prefill resumes after shared prefix
         state.request.status = PREFILL
         self.active[state.slot] = state
         self._prefilling.append(state)
         if _trace.enabled():
             _trace.instant("admit", "scheduler", rid=state.rid,
-                           slot=state.slot)
+                           slot=state.slot, pages=len(state.pages),
+                           shared_tokens=state.shared_tokens)
         return state
 
     def prefill_done(self, state: RequestState) -> None:
@@ -137,7 +161,8 @@ class Scheduler:
         self._prefilling.remove(state)
 
     def finish(self, state: RequestState, status: str = DONE) -> None:
-        """Release the slot; ``status`` records how the request ended."""
+        """Release the slot (and its pages); ``status`` records how the
+        request ended."""
         state.request.status = status
         state.request.done = status == DONE
         if state.slot is not None:
@@ -146,14 +171,29 @@ class Scheduler:
             state.slot = None
         if state in self._prefilling:
             self._prefilling.remove(state)
+        if self.pool is not None and state.pages:
+            self.pool.release(state.pages, rid=state.rid)
+            state.pages = []
+            state.page_hashes = []
 
     def evict(self, rid: int) -> RequestState:
-        """Reclaim the slot of a live request (marked, not dropped)."""
-        for state in self.active.values():
+        """Cancel a live *or still-queued* request (marked, not dropped).
+
+        A queued request holds no slot or pages yet — it just leaves
+        the queue as ``evicted``.  (It used to raise
+        ``KeyError("holds no slot")``, making queued requests
+        uncancellable.)"""
+        for state in list(self.active.values()):
             if state.rid == rid:
                 self.finish(state, EVICTED)
                 return state
-        raise KeyError(f"request {rid} holds no slot")
+        for state in self.queue:
+            if state.rid == rid:
+                self.queue.remove(state)
+                state.request.status = EVICTED
+                state.request.done = False
+                return state
+        raise KeyError(f"request {rid} is neither active nor queued")
 
     # ------------------------------------------------------------- planning
     def schedule(self) -> TickPlan:

@@ -1,0 +1,363 @@
+"""Paged KV-cache: pool bookkeeping, prefix sharing, and the paged
+runtime's differential guarantees (token identity vs the unpaged
+runtime, the page-leak invariant, eviction/cancellation under memory
+pressure)."""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime.buckets import BucketLattice
+from repro.runtime.pages import NULL_PAGE, PagePool, PoolExhausted
+from repro.runtime.scheduler import Request, RequestState
+
+
+# ----------------------------------------------------------------- helpers
+def _state(rid, prompt, max_new=4):
+    return RequestState(Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                                max_new_tokens=max_new))
+
+
+# ---------------------------------------------------------------- PagePool
+class TestPagePool:
+    def test_geometry_and_null_page_reserved(self):
+        pool = PagePool(9, 4)
+        assert pool.usable == 8 and pool.n_free == 8
+        assert pool.pages_for(1) == 1 and pool.pages_for(4) == 1
+        assert pool.pages_for(5) == 2
+        # prompt + first decode row, capped at max_rows
+        assert pool.required_pages(3) == 1        # 4 rows
+        assert pool.required_pages(4) == 2        # 5 rows
+        pages = pool.alloc(8)
+        assert NULL_PAGE not in pages             # never handed out
+        assert pool.n_free == 0
+
+    def test_alloc_exhaustion_is_atomic(self):
+        pool = PagePool(4, 2)
+        pool.alloc(2)
+        with pytest.raises(PoolExhausted):
+            pool.alloc(2)
+        assert pool.n_free == 1                   # nothing half-allocated
+
+    def test_release_refcounts_and_free_list(self):
+        pool = PagePool(5, 2)
+        pages = pool.alloc(3)
+        pool.refcount[pages[0]] += 1              # simulate one sharer
+        freed = pool.release(pages)
+        assert freed == 2                         # shared page survives
+        assert pool.refcount == {pages[0]: 1}
+        assert pool.release([pages[0]]) == 1
+        assert pool.n_free == pool.usable and not pool.refcount
+
+    def test_chain_hashes_prefix_property(self):
+        pool = PagePool(9, 4)
+        a = pool._chain_hashes(np.arange(12, dtype=np.int32))
+        b = pool._chain_hashes(np.r_[np.arange(8), 99, 1, 2, 3].astype(np.int32))
+        assert a[:2] == b[:2] and a[2] != b[2]    # chain digest covers prefix
+        assert len(pool._chain_hashes(np.arange(7, dtype=np.int32))) == 1
+
+    def test_admit_register_share_release_cycle(self):
+        pool = PagePool(17, 4)
+        prompt = np.arange(13, dtype=np.int32)    # 3 full pages + 1 row
+        s0 = _state(0, prompt)
+        assert pool.try_admit(s0)
+        assert len(s0.pages) == 4 and s0.shared_tokens == 0
+        pool.register(s0)
+        assert pool.stats()["prefix_index_size"] == 3
+
+        s1 = _state(1, prompt)                    # identical prompt
+        assert pool.try_admit(s1)
+        assert s1.pages[:3] == s0.pages[:3]       # mapped, not recomputed
+        assert s1.shared_tokens == 12
+        assert pool.prefix_hits == 1 and pool.prefix_shared_tokens == 12
+        assert [pool.refcount[p] for p in s0.pages[:3]] == [2, 2, 2]
+
+        pool.release(s0.pages, rid=0)             # owner leaves first
+        assert all(p in pool.refcount for p in s1.pages)
+        pool.release(s1.pages, rid=1)
+        assert pool.n_free == pool.usable and not pool.refcount
+        assert pool.stats()["prefix_index_size"] == 0
+
+    def test_share_capped_to_leave_one_prefill_token(self):
+        """A fully-resident prompt still prefills its last page — the
+        first token's logits must come from a real prefill."""
+        pool = PagePool(17, 4)
+        prompt = np.arange(12, dtype=np.int32)    # exactly 3 pages
+        s0 = _state(0, prompt)
+        pool.try_admit(s0)
+        pool.register(s0)
+        s1 = _state(1, prompt)
+        pool.try_admit(s1)
+        assert s1.shared_tokens == 8              # (12-1)//4 = 2 pages
+
+    def test_register_repoints_duplicate_prefix(self):
+        """Two requests admitted together prefill the same prefix into
+        private pages; the index must survive the first one's release by
+        re-pointing at the newer copy (latest-registrant-wins)."""
+        pool = PagePool(17, 4)
+        prompt = np.arange(13, dtype=np.int32)
+        s0, s1 = _state(0, prompt), _state(1, prompt)
+        pool.try_admit(s0)
+        pool.try_admit(s1)                        # index empty: no sharing
+        assert s1.shared_tokens == 0
+        pool.register(s0)
+        pool.register(s1)                         # re-points to s1's pages
+        pool.release(s0.pages, rid=0)
+        assert pool.stats()["prefix_index_size"] == 3
+        s2 = _state(2, prompt)
+        pool.try_admit(s2)
+        assert s2.pages[:3] == s1.pages[:3]
+
+    def test_can_admit_is_pure(self):
+        pool = PagePool(3, 4, max_rows=64)        # 2 usable pages
+        assert pool.can_admit(np.arange(7, dtype=np.int32))
+        assert not pool.can_admit(np.arange(12, dtype=np.int32))
+        assert pool.n_free == 2 and pool.admission_blocks == 0
+
+    def test_try_admit_blocks_without_allocating(self):
+        pool = PagePool(3, 4, max_rows=64)
+        s = _state(0, np.arange(12, dtype=np.int32))  # needs 4 pages
+        assert not pool.try_admit(s)
+        assert s.pages == [] and pool.n_free == 2
+        assert pool.admission_blocks == 1
+
+    def test_prefix_sharing_off(self):
+        pool = PagePool(17, 4, prefix_sharing=False)
+        prompt = np.arange(13, dtype=np.int32)
+        s0 = _state(0, prompt)
+        pool.try_admit(s0)
+        pool.register(s0)
+        s1 = _state(1, prompt)
+        pool.try_admit(s1)
+        assert s1.shared_tokens == 0 and pool.prefix_hits == 0
+
+
+# ------------------------------------------------------------ page lattice
+class TestPageLattice:
+    def test_page_buckets(self):
+        lat = BucketLattice(4, max_chunk=8, max_pages=16)
+        assert lat.page_buckets == (1, 2, 4, 8, 16)
+        assert lat.page_bucket(3) == 4 and lat.page_bucket(16) == 16
+        with pytest.raises(ValueError):
+            lat.page_bucket(17)
+        unpaged = BucketLattice(4, max_chunk=8)
+        assert unpaged.page_buckets == ()
+        with pytest.raises(ValueError):
+            unpaged.page_bucket(1)
+
+    def test_tuple_bucket_keys(self):
+        from repro.runtime.buckets import BucketTable
+
+        t = BucketTable()
+        assert t.key("decode", (4, np.int64(8)), None) == ("decode", (4, 8), None)
+        assert t.key("prefill", 4, None) == ("prefill", 4, None)
+
+
+# ------------------------------------------------- paged runtime (w/ model)
+@pytest.fixture(scope="module")
+def served():
+    from repro.configs import get_config
+    from repro.models.transformer import Model
+
+    cfg = get_config("minicpm-2b", smoke=True).with_(n_periods=1)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _requests(cfg, lens, max_new=4, prefix=None):
+    out = []
+    for i, ln in enumerate(lens):
+        rng = np.random.default_rng(1000 + i)
+        tail = rng.integers(0, cfg.vocab_size, size=ln).astype(np.int32)
+        prompt = tail if prefix is None else np.concatenate([prefix, tail])
+        out.append(Request(rid=i, prompt=prompt,
+                           max_new_tokens=max_new[i]
+                           if isinstance(max_new, list) else max_new))
+    return out
+
+
+def _assert_drained(rt):
+    """The page-leak invariant: after serve() drains, every page is back
+    on the free list and no refcount survives."""
+    assert rt.pool.n_free == rt.pool.usable
+    assert not rt.pool.refcount
+
+
+def test_paged_token_identity_and_leak_invariant(served):
+    """The tentpole oracle: paged gather/scatter over page tables (with
+    null-page padding and page-count bucketing) is greedy
+    token-identical to the unpaged runtime on ragged traffic."""
+    from repro.runtime.engine import ServingRuntime
+
+    cfg, _, params = served
+    lens = [3, 11, 7, 19, 2, 13]
+    ref = _requests(cfg, lens)
+    ServingRuntime(cfg, params, slots=2, max_len=64, prefill_chunk=8,
+                   precompile=False).serve(ref)
+
+    got = _requests(cfg, lens)
+    rt = ServingRuntime(cfg, params, slots=2, max_len=64, prefill_chunk=8,
+                        precompile=False, paged=True, page_size=4)
+    rt.serve(got)
+    for a, b in zip(ref, got):
+        assert b.done and b.output == a.output, (a.rid, a.output, b.output)
+    _assert_drained(rt)
+    # paged bucket keys are lattice tuples; unpaged stay ints
+    kinds = {k[0] for k in rt.buckets.keys()}
+    assert kinds <= {"decode", "prefill", "page_view", "page_commit"}
+    assert all(isinstance(k[1], tuple) for k in rt.buckets.keys()
+               if k[0] in ("decode", "prefill"))
+
+
+def test_prefix_sharing_differential(served):
+    """Shared system prompt: the sharing runtime must emit exactly the
+    tokens the non-sharing one does — a shared page is bit-identical to
+    what prefill would recompute — while actually sharing."""
+    from repro.runtime.engine import ServingRuntime
+
+    cfg, _, params = served
+    rng = np.random.default_rng(7)
+    sysp = rng.integers(0, cfg.vocab_size, size=12).astype(np.int32)
+    lens = [3, 5, 4, 6, 2]
+    stagger = [4, 7, 10, 13, 16]      # lifetimes overlap → sharing chains
+
+    ref = _requests(cfg, lens, max_new=stagger, prefix=sysp)
+    unshared = ServingRuntime(cfg, params, slots=2, max_len=64,
+                              prefill_chunk=8, precompile=False,
+                              paged=True, page_size=4, prefix_sharing=False)
+    unshared.serve(ref)
+    assert unshared.pool.prefix_hits == 0
+    _assert_drained(unshared)
+
+    got = _requests(cfg, lens, max_new=stagger, prefix=sysp)
+    rt = ServingRuntime(cfg, params, slots=2, max_len=64, prefill_chunk=8,
+                        precompile=False, paged=True, page_size=4)
+    rt.serve(got)
+    for a, b in zip(ref, got):
+        assert b.done and b.output == a.output, (a.rid, a.output, b.output)
+    assert rt.pool.prefix_hits > 0
+    assert rt.metrics.prefix_shared_tokens > 0
+    _assert_drained(rt)
+
+
+def test_pool_exhaustion_preempts_and_drains(served):
+    """A pool too small for the offered load: admission blocks, decode
+    growth preempts (youngest evicted, marked not dropped), and the pool
+    still drains clean."""
+    from repro.runtime.engine import ServingRuntime
+
+    cfg, _, params = served
+    rt = ServingRuntime(cfg, params, slots=4, max_len=64, prefill_chunk=8,
+                        precompile=False, paged=True, page_size=4, pages=9)
+    reqs = _requests(cfg, [14, 15, 13, 14], max_new=12)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        rt.serve(reqs, max_steps=200)
+    assert all(r.status in ("done", "evicted") for r in reqs)
+    assert any(r.status == "done" for r in reqs)
+    assert rt.pool.admission_blocks > 0 or rt.metrics.evictions > 0
+    _assert_drained(rt)
+
+
+def test_cancel_while_queued(served):
+    """The S1 regression: a rid still in the queue (no slot, no pages)
+    is cancellable — previously a KeyError."""
+    from repro.runtime.engine import ServingRuntime
+
+    cfg, _, params = served
+    rt = ServingRuntime(cfg, params, slots=1, max_len=64, prefill_chunk=8,
+                        precompile=False, paged=True, page_size=4)
+    a, b = _requests(cfg, [5, 7])
+    rt.submit(a)
+    rt.submit(b)                      # b queued behind a's slot
+    req = rt.evict(b.rid)
+    assert req is b
+    assert b.status == "evicted" and not b.done
+    assert rt.metrics.evictions == 1
+    rt.serve([])                      # drain a
+    assert a.done
+    _assert_drained(rt)
+    with pytest.raises(KeyError, match="neither active nor queued"):
+        rt.scheduler.evict(99)
+
+
+def test_evict_while_prefilling_releases_pages(served):
+    """Evicting mid-prefill (slot bound, pages held, prompt not yet
+    committed) releases the slot and every page."""
+    from repro.runtime.engine import ServingRuntime
+
+    cfg, _, params = served
+    rt = ServingRuntime(cfg, params, slots=1, max_len=64, prefill_chunk=4,
+                        precompile=False, paged=True, page_size=4)
+    (a,) = _requests(cfg, [19])       # several chunks of prefill
+    rt.submit(a)
+    rt.tick()                         # admit + first chunk only
+    assert a.status == "prefill" and rt.pool.n_free < rt.pool.usable
+    rt.evict(a.rid)
+    assert a.status == "evicted" and not a.done
+    _assert_drained(rt)
+    assert not rt.scheduler.has_work()
+
+
+def test_serve_rejects_offender_and_serves_rest(served):
+    """The S2 regression: an over-long prompt mid-list must not abandon
+    the half-submitted batch — it is marked rejected and the rest are
+    served to completion."""
+    from repro.runtime.engine import ServingRuntime
+
+    cfg, _, params = served
+    rt = ServingRuntime(cfg, params, slots=2, max_len=16, prefill_chunk=8,
+                        precompile=False)
+    good1, good2 = _requests(cfg, [5, 6], max_new=3)
+    bad = Request(rid=99, prompt=np.zeros(17, np.int32), max_new_tokens=3)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        rt.serve([good1, bad, good2])
+    assert bad.status == "rejected" and not bad.done and bad.output == []
+    assert good1.done and good2.done
+    assert rt.metrics.rejections == 1
+    assert rt.metrics.snapshot()["rejections"] == 1
+    assert any("rejected" in str(x.message) for x in w)
+    # direct submit of an unservable request still raises
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        rt.submit(Request(rid=100, prompt=np.zeros(17, np.int32)))
+
+
+def test_paged_rejects_prompt_too_big_for_pool(served):
+    from repro.runtime.engine import ServingRuntime
+
+    cfg, _, params = served
+    rt = ServingRuntime(cfg, params, slots=2, max_len=64, prefill_chunk=8,
+                        precompile=False, paged=True, page_size=4, pages=5)
+    with pytest.raises(ValueError, match="pool holds"):
+        rt.submit(Request(rid=0, prompt=np.zeros(30, np.int32)))
+
+
+def test_precompile_buckets_pins_compile_set(served):
+    """After precompile_buckets(), a served trace creates no new bucket
+    entries — the zero-recompile steady state is deterministic, not
+    warm-up dependent."""
+    from repro.runtime.engine import ServingRuntime
+
+    cfg, _, params = served
+    rt = ServingRuntime(cfg, params, slots=2, max_len=32, prefill_chunk=8,
+                        precompile=False, paged=True, page_size=4)
+    n = rt.precompile_buckets()
+    assert n == rt.buckets.compiles > 0
+    reqs = _requests(cfg, [3, 9, 14], max_new=4)
+    rt.serve(reqs)
+    assert all(r.done for r in reqs)
+    assert rt.buckets.compiles == n
+    _assert_drained(rt)
+
+
+def test_paged_guardrails(served):
+    from repro.runtime.engine import ServingRuntime
+
+    cfg, _, params = served
+    with pytest.raises(NotImplementedError, match="sharded"):
+        ServingRuntime(cfg, params, slots=2, max_len=32, paged=True,
+                       precompile=False, mesh=object())

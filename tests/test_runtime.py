@@ -261,6 +261,25 @@ class TestScheduler:
         assert [st.rid for st in plan.admitted] == [2]
         assert s.n_free == 0
 
+    def test_evict_queued_request_cancels_it(self):
+        """A request still waiting for a slot is cancellable: it leaves
+        the queue marked evicted (used to KeyError — queued requests
+        could not be cancelled)."""
+        s = self._sched()
+        states = [s.submit(self._req(rid)) for rid in range(3)]
+        s.schedule()                                   # 0, 1 take the slots
+        assert s.evict(2) is states[2]
+        assert states[2].request.status == "evicted"
+        assert not states[2].request.done
+        assert len(s.queue) == 0 and s.n_active == 2   # slots untouched
+
+    def test_evict_unknown_rid_raises(self):
+        s = self._sched()
+        s.submit(self._req(0))
+        s.schedule()
+        with pytest.raises(KeyError, match="neither active nor queued"):
+            s.evict(42)
+
     def test_finish_releases_slot(self):
         s = self._sched(slots=1)
         st = s.submit(self._req(0))

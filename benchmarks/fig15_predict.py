@@ -1,0 +1,157 @@
+"""Fig. 15 (repo extension): predictive dispatch — regret and cold start.
+
+Two questions about the ``"predict"`` tuning policy
+(:mod:`repro.tuning.model` fitted on the cache's measurements):
+
+1. **Regret** — leave-shapes-out: measure every candidate over a grid of
+   (Table II case × size), then for each shape refit the cost model on
+   the *other* shapes only and ask it to pick a winner.  Regret is the
+   predicted winner's measured µs over the measured oracle minimum.
+   Acceptance bar: median regret ≤ 10 %.
+
+2. **Cold start** — serve the held-out shapes from scratch.  A
+   ``"measure"`` dispatcher pays the full candidate sweep per shape; a
+   ``"predict"`` dispatcher fitted on the remaining grid answers from
+   the model and executes immediately.  Acceptance bar: predict
+   wall-clock ≥ 5× faster.
+
+A warm-cache check closes the loop: over the fully measured cache the
+predict policy performs **zero** measurements and zero predictions —
+recorded winners always win (PR 2 semantics are untouched).
+
+Publishes ``LAST_RESULTS`` → ``BENCH_predict.json`` (``.quick.json``
+under ``--quick``; see ``benchmarks.run.JSON_ARTIFACTS``).
+"""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import QUICK, rand
+from repro.core.notation import parse_spec
+from repro.core.table2 import CASES
+from repro.tuning import Dispatcher, TuningCache, canonical_key
+from repro.tuning.model import CostModel
+
+LABELS = ["1.1", "1.3", "2.4", "3.4", "4.1", "5.3"]
+QUICK_LABELS = ["1.1", "2.4", "3.4"]
+SIZES = (32, 48, 64, 80, 96)
+QUICK_SIZES = (32, 48, 64)
+#: the held-out size is interior — the model interpolates, never
+#: extrapolates past the grid edge (matching the fleet use case: a new
+#: machine's shapes fall inside the fleet cache's span).
+HOLDOUT_SIZE = {True: 48, False: 64}
+
+LAST_RESULTS: dict = {}
+
+
+def _operands(label: str, n: int):
+    cs = parse_spec(CASES[label].row_major())
+    dims = {m: n for m in "mnpk"}
+    A = rand(11, [dims[m] for m in cs.a_modes])
+    B = rand(12, [dims[m] for m in cs.b_modes])
+    return cs, dims, A, B
+
+
+def _subcache(full: TuningCache, skip: set[str]) -> TuningCache:
+    sub = TuningCache(None)
+    for k, v in full.entries.items():
+        if k not in skip:
+            sub.put(k, v, persist=False)
+    return sub
+
+
+def run(quick: bool | None = None):
+    if quick is None:
+        quick = QUICK or os.environ.get("REPRO_BENCH_QUICK") == "1"
+    labels = QUICK_LABELS if quick else LABELS
+    sizes = QUICK_SIZES if quick else SIZES
+    grid = [(lb, n) for lb in labels for n in sizes]
+    holdout = [(lb, n) for lb, n in grid if n == HOLDOUT_SIZE[quick]]
+
+    # ---- full measured cache over the grid (ground truth for regret)
+    full = Dispatcher(TuningCache(None), policy="measure",
+                      iters=5 if quick else 10, warmup=2)
+    keys = {}
+    for lb, n in grid:
+        cs, dims, A, B = _operands(lb, n)
+        full.tune(cs, A, B)
+        keys[(lb, n)] = canonical_key(cs, dims, jnp.float32)
+
+    # ---- leave-one-shape-out regret against the measured oracle
+    regrets, rows = [], []
+    for lb, n in grid:
+        cs, dims, _, _ = _operands(lb, n)
+        model = CostModel.from_cache(_subcache(full.cache, {keys[(lb, n)]}))
+        pred = model.predict(cs, dims, jnp.float32)
+        results = full.cache.get(keys[(lb, n)])["results"]
+        oracle = min(results.values())
+        got = results.get(pred.candidate.key()) if pred else None
+        if got is None:  # no confident family / unseen candidate: worst case
+            got = max(results.values())
+        regrets.append(100.0 * (got - oracle) / oracle)
+    regrets.sort()
+    median_regret = regrets[len(regrets) // 2]
+
+    # ---- cold start over the held-out shapes: measure vs predict
+    dm = Dispatcher(TuningCache(None), policy="measure",
+                    iters=5 if quick else 10, warmup=2)
+    t0 = time.perf_counter()
+    for lb, n in holdout:
+        cs, _, A, B = _operands(lb, n)
+        jax.block_until_ready(dm.contract(cs, A, B))
+    t_measure = time.perf_counter() - t0
+
+    train = _subcache(full.cache, {keys[s] for s in holdout})
+    dp = Dispatcher(train, policy="predict",
+                    iters=5 if quick else 10, warmup=2)
+    t0 = time.perf_counter()
+    for lb, n in holdout:
+        cs, _, A, B = _operands(lb, n)
+        jax.block_until_ready(dp.contract(cs, A, B))
+    t_predict = time.perf_counter() - t0
+    speedup = t_measure / t_predict if t_predict > 0 else float("inf")
+
+    # ---- warm-cache check: recorded winners pre-empt the model entirely
+    dw = Dispatcher(full.cache, policy="predict")
+    for lb, n in grid:
+        cs, _, A, B = _operands(lb, n)
+        dw.contract(cs, A, B)
+
+    rows = [
+        ("fig15/coldstart_measure", t_measure * 1e6,
+         f"shapes={len(holdout)};measurements={dm.measurements}"),
+        ("fig15/coldstart_predict", t_predict * 1e6,
+         f"speedup={speedup:.1f};predicted={dp.predictions};"
+         f"fallback_measurements={dp.measurements}"),
+        ("fig15/regret", 0.0,
+         f"median_pct={median_regret:.1f};max_pct={regrets[-1]:.1f};"
+         f"n={len(regrets)}"),
+        ("fig15/warm_check", 0.0,
+         f"new_measurements={dw.measurements};predictions={dw.predictions};"
+         f"hits={dw.hits}"),
+    ]
+
+    LAST_RESULTS.clear()
+    LAST_RESULTS.update({
+        "platform": jax.default_backend(),
+        "quick": quick,
+        "grid": [f"{lb}@{n}" for lb, n in grid],
+        "holdout": [f"{lb}@{n}" for lb, n in holdout],
+        "regret_pct": {"median": median_regret, "max": regrets[-1],
+                       "all_sorted": regrets},
+        "coldstart": {
+            "measure_s": t_measure, "predict_s": t_predict,
+            "speedup": speedup,
+            "predicted": dp.predictions,
+            "fallback_measurements": dp.measurements,
+        },
+        "warm_check": {"new_measurements": dw.measurements,
+                       "predictions": dw.predictions, "hits": dw.hits},
+        "bars": {"median_regret_le_10pct": median_regret <= 10.0,
+                 "coldstart_speedup_ge_5x": speedup >= 5.0,
+                 "warm_zero_measurements": dw.measurements == 0},
+    })
+    return rows

@@ -7,10 +7,11 @@ Prints ``name,us_per_call,derived`` CSV.  Run:
 (``benchmarks.common.QUICK``) and modules whose ``run()`` accepts a
 ``quick`` keyword also shrink their problem sizes.
 
-Modules that publish a ``LAST_RESULTS`` dict (``fig14_runtime``) get it
-written as machine-readable JSON next to the repo root —
-``BENCH_runtime.json`` tracks the serving perf trajectory PR over PR
-(override the directory with ``REPRO_BENCH_DIR``).
+Modules that publish a ``LAST_RESULTS`` dict (``fig14_runtime``,
+``fig15_predict``) get it written as machine-readable JSON next to the
+repo root — ``BENCH_runtime.json`` tracks the serving perf trajectory
+and ``BENCH_predict.json`` the cost-model regret/cold-start bars, PR
+over PR (override the directory with ``REPRO_BENCH_DIR``).
 """
 
 import argparse
@@ -36,11 +37,15 @@ MODULES = [
     "fig12_sharded",
     "fig13_program",
     "fig14_runtime",
+    "fig15_predict",
     "table2_cases",
 ]
 
 #: module → JSON artifact written after a successful run.
-JSON_ARTIFACTS = {"fig14_runtime": "BENCH_runtime.json"}
+JSON_ARTIFACTS = {
+    "fig14_runtime": "BENCH_runtime.json",
+    "fig15_predict": "BENCH_predict.json",
+}
 
 
 def _write_json_artifact(mod, mod_name: str) -> None:

@@ -67,6 +67,17 @@ def main():
     ap.add_argument("--tuning-cache", default=None,
                     help="tuning-cache JSON path (default: "
                          "$REPRO_TUNING_CACHE or ~/.cache/repro/tuning.json)")
+    ap.add_argument("--tune-policy", default=None,
+                    choices=["off", "cached", "measure", "predict"],
+                    help="dispatcher policy for pretune + serving; "
+                         "'predict' answers cache misses from the learned "
+                         "cost model when confident, so --pretune only "
+                         "measures low-confidence keys (default: measure)")
+    ap.add_argument("--cache-import", action="append", default=[],
+                    metavar="JSON", dest="cache_imports",
+                    help="merge a tuning cache exported by another machine "
+                         "(repro.tuning.federate) into this one before "
+                         "pretune; repeatable")
     ap.add_argument("--trace", default=None, metavar="OUT_JSON",
                     help="record a span trace of warm-up + serving and "
                          "write it as Chrome-trace JSON (open in "
@@ -100,11 +111,29 @@ def main():
     cfg = get_config(args.arch, smoke=args.smoke)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+
+    tuner = None
+    if args.cache_imports:
+        from repro.tuning.dispatch import (
+            Dispatcher, default_cache_path, set_dispatcher,
+        )
+        from repro.tuning.federate import import_into
+
+        tuner = Dispatcher(args.tuning_cache or default_cache_path(),
+                           policy=args.tune_policy or "measure")
+        for src in args.cache_imports:
+            st = import_into(tuner.cache, src)
+            print(f"cache-import {src}: +{st['added']} added, "
+                  f"{st['merged']} merged ({st['imported']} read)")
+        set_dispatcher(tuner)
+
     t0 = time.perf_counter()
     if args.legacy:
         engine = ServeEngine(
             cfg, params, slots=args.slots, max_len=args.max_len,
-            pretune=args.pretune, tuning_cache=args.tuning_cache, mesh=mesh,
+            pretune=args.pretune, tuner=tuner,
+            tuning_cache=args.tuning_cache,
+            tune_policy=args.tune_policy, mesh=mesh,
         )
         runtime = engine.runtime
     else:
@@ -113,7 +142,9 @@ def main():
             prefill_chunk=args.chunk,
             paged=args.paged, page_size=args.page_size, pages=args.pages,
             prefix_sharing=not args.no_prefix_share,
-            pretune=args.pretune, tuning_cache=args.tuning_cache, mesh=mesh,
+            pretune=args.pretune, tuner=tuner,
+            tuning_cache=args.tuning_cache,
+            tune_policy=args.tune_policy, mesh=mesh,
         )
         print(f"runtime buckets: {runtime.lattice.describe()}")
         if args.paged:

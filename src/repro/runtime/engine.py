@@ -90,6 +90,7 @@ class ServingRuntime:
                  paged: bool = False, page_size: int = 16,
                  pages: int | None = None, prefix_sharing: bool = True,
                  pretune: bool = False, tuner=None, tuning_cache=None,
+                 tune_policy: str | None = None,
                  pretune_prompt_lens: tuple[int, ...] = (8, 16, 32),
                  precompile: bool = True,
                  mesh=None, sharding_rules=None, clock=None):
@@ -204,6 +205,7 @@ class ServingRuntime:
         if pretune:
             self.pretune_stats = self.warmup_tuning(
                 tuner=tuner, tuning_cache=tuning_cache,
+                tune_policy=tune_policy,
                 prompt_lens=pretune_prompt_lens,
             )
         if precompile:
@@ -350,13 +352,19 @@ class ServingRuntime:
         return self.buckets.compiles
 
     def warmup_tuning(self, *, tuner=None, tuning_cache=None,
+                      tune_policy: str | None = None,
                       prompt_lens: tuple[int, ...] = (8, 16, 32)) -> dict:
         """Pre-tune the runtime's contraction working set before serving.
 
         Measures (and persists, when the dispatcher's cache has a path)
         the fastest execution mode for every distinct contraction the
-        model issues at serving shapes.  Returns the pretune stats dict;
-        the dispatcher is kept on ``self.tuner``.
+        model issues at serving shapes.  With ``tune_policy="predict"``
+        the warm-up is *predict-first*: keys the cost model (fitted on
+        the cache — e.g. one imported from the fleet, see
+        :mod:`repro.tuning.federate`) is confident about skip their
+        measurement sweep entirely, so warm-up wall-clock drops by the
+        predictor's coverage.  Returns the pretune stats dict; the
+        dispatcher is kept on ``self.tuner``.
         """
         if tuner is None:
             from repro.tuning.dispatch import Dispatcher, get_dispatcher
@@ -365,6 +373,8 @@ class ServingRuntime:
                 Dispatcher(tuning_cache) if tuning_cache is not None
                 else get_dispatcher()
             )
+        if tune_policy is not None:
+            tuner.policy = tune_policy
         self.tuner = tuner
         return tuner.pretune(self.contraction_working_set(prompt_lens))
 

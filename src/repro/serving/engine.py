@@ -36,17 +36,19 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 1024, greedy: bool = True,
                  pretune: bool = False, tuner=None,
-                 tuning_cache=None,
+                 tuning_cache=None, tune_policy: str | None = None,
                  pretune_prompt_lens: tuple[int, ...] = (8, 16, 32),
                  precompile: bool = True,
                  mesh=None, sharding_rules=None):
         """See :class:`repro.runtime.engine.ServingRuntime` for the
         parameter semantics (``mesh`` serves sharded, ``pretune`` warms
-        the tuning cache, ``precompile`` warms the program cache)."""
+        the tuning cache — ``tune_policy="predict"`` makes that warm-up
+        predict-first, ``precompile`` warms the program cache)."""
         self._rt = ServingRuntime(
             cfg, params, slots=slots, max_len=max_len, greedy=greedy,
             chunked_prefill=False, bucketed_decode=False,
             pretune=pretune, tuner=tuner, tuning_cache=tuning_cache,
+            tune_policy=tune_policy,
             pretune_prompt_lens=pretune_prompt_lens, precompile=precompile,
             mesh=mesh, sharding_rules=sharding_rules,
         )

@@ -33,7 +33,13 @@ import jax.numpy as jnp
 
 from repro.core.notation import ContractionSpec, parse_spec
 
-__all__ = ["SCHEMA_VERSION", "TuningCache", "canonical_key", "canonical_spec"]
+__all__ = [
+    "SCHEMA_VERSION",
+    "TuningCache",
+    "canonical_key",
+    "canonical_spec",
+    "valid_entry",
+]
 
 SCHEMA_VERSION = 1
 
@@ -70,7 +76,16 @@ def canonical_key(
     return f"{cspec}|{'x'.join(map(str, sig))}|{jnp.dtype(dtype).name}|{platform}"
 
 
-def _valid_entry(entry) -> bool:
+def valid_entry(entry) -> bool:
+    """Structural validation of one cache entry.
+
+    ``best`` must be a parseable candidate key present in ``results``,
+    and every result a number.  Extra keys ride along untouched — the
+    ``"predict"`` policy adds ``predicted``/``confidence``, the
+    transpose audit adds ``transposes`` — so caches grown by newer code
+    stay loadable by older code and mergeable by
+    :mod:`repro.tuning.federate`.
+    """
     if not (
         isinstance(entry, dict)
         and isinstance(entry.get("best"), str)
@@ -141,7 +156,7 @@ class TuningCache:
                 f"tuning cache {self.path!r} has no valid 'entries'; starting empty"
             )
             return
-        kept = {k: v for k, v in entries.items() if _valid_entry(v)}
+        kept = {k: v for k, v in entries.items() if valid_entry(v)}
         dropped = len(entries) - len(kept)
         if dropped:
             warnings.warn(
@@ -175,7 +190,7 @@ class TuningCache:
         return self.entries.get(key)
 
     def put(self, key: str, entry: dict, *, persist: bool = True) -> None:
-        if not _valid_entry(entry):
+        if not valid_entry(entry):
             raise ValueError(f"malformed tuning entry for {key!r}: {entry!r}")
         self.entries[key] = entry
         self._version += 1

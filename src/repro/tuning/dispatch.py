@@ -11,15 +11,26 @@ routes a pairwise contraction through a :class:`Dispatcher`:
    * ``"measure"`` (default) — enumerate legal candidates
      (:mod:`repro.tuning.candidates`), time each
      (:mod:`repro.tuning.measure`), persist the results, run the winner;
+   * ``"predict"`` — ask the learned cost model
+     (:mod:`repro.tuning.model`, fitted on this cache's accumulated
+     measurements) to pick the winner; when its confidence clears
+     ``self.confidence`` the pick executes immediately — **zero
+     measurement stall** — and is persisted as an entry flagged
+     ``"predicted"`` (distinct from measured entries: the model never
+     trains on it, and a later ``tune()`` re-measures from scratch);
+     below the threshold, fall back to measurement (or analytic under
+     jit, where operands cannot be timed);
    * ``"cached"`` — no measurement; fall back to the analytic
      ``strategy="auto"`` plan (warm caches only, e.g. CI);
    * ``"off"`` — always the analytic plan (a kill switch).
 
 Under a ``jit`` trace operands are abstract and cannot be timed: misses
 silently degrade to the analytic plan (hits still dispatch the winner —
-the winner's identity is static, so it traces fine).  Counters
-(``hits`` / ``misses`` / ``measurements``) are exposed on the dispatcher
-so callers can assert "a warm cache performs zero new measurements".
+the winner's identity is static, so it traces fine; confident
+*predictions* also survive jit, being pure arithmetic).  Counters
+(``hits`` / ``misses`` / ``measurements`` / ``predictions``) are exposed
+on the dispatcher so callers can assert "a warm cache performs zero new
+measurements".
 
 Demo::
 
@@ -30,6 +41,7 @@ from __future__ import annotations
 
 import argparse
 import os
+import warnings
 from typing import Iterable, Literal
 
 import jax
@@ -40,6 +52,7 @@ from repro.core.notation import ContractionSpec, parse_spec
 from repro.obs import trace as _trace
 from repro.tuning.cache import TuningCache, canonical_key
 from repro.tuning.candidates import Candidate, enumerate_candidates
+from repro.tuning.federate import pick_best
 from repro.tuning.measure import measure_candidates
 
 __all__ = [
@@ -53,12 +66,19 @@ __all__ = [
     "ANALYTIC_FLOPS_PER_US",
 ]
 
-TuningPolicy = Literal["off", "cached", "measure"]
+TuningPolicy = Literal["off", "cached", "measure", "predict"]
 
-#: crude flops→µs bridge used when a path mixes measured steps with steps
-#: that have no cache entry yet (10 GFLOP/s — deliberately pessimistic so
-#: measured winners dominate unmeasured guesses only via real data).
+#: legacy flops→µs bridge (10 GFLOP/s).  :func:`path_cost` no longer
+#: uses it — unmeasured steps are priced by the per-step roofline bound
+#: (:func:`repro.obs.roofline.roofline_bound_us`, real hardware
+#: constants) or, under a ``"predict"`` dispatcher, by the cost model's
+#: µs.  Kept exported for external callers of the old pricing.
 ANALYTIC_FLOPS_PER_US = 1.0e4
+
+#: cache keys whose entry turned out structurally dangling (``best`` not
+#: in ``results`` — possible after hand edits or buggy external merges):
+#: each is warned about once per process, then silently treated as a miss.
+_WARNED_DANGLING: set[str] = set()
 
 
 def default_cache_path() -> str:
@@ -75,11 +95,17 @@ class Dispatcher:
     Args:
       cache: a :class:`TuningCache`, a path for one, or ``None`` for an
         in-memory cache.
-      policy: ``"measure"`` | ``"cached"`` | ``"off"`` (see module doc).
+      policy: ``"measure"`` | ``"predict"`` | ``"cached"`` | ``"off"``
+        (see module doc).
       backends: backends candidates may use; default
         :func:`~repro.tuning.candidates.default_backends` (XLA-only off
         TPU — Pallas interpret mode is never the wall-clock winner there).
       iters/warmup: measurement repeats per candidate.
+      confidence: minimum cost-model confidence for a ``"predict"``
+        dispatch; below it the policy degrades to measurement.
+      audit_transposes: scan each measured candidate's optimized HLO for
+        surviving transposes and store the counts in the cache entry —
+        a Fig. 1-style regression signal and a cost-model feature.
     """
 
     def __init__(
@@ -90,7 +116,11 @@ class Dispatcher:
         backends: tuple[str, ...] | None = None,
         iters: int = 5,
         warmup: int = 2,
+        confidence: float | None = None,
+        audit_transposes: bool = False,
     ):
+        from repro.tuning.model import CONFIDENCE_THRESHOLD
+
         if not isinstance(cache, TuningCache):
             cache = TuningCache(cache)
         self.cache = cache
@@ -98,17 +128,41 @@ class Dispatcher:
         self.backends = backends
         self.iters = iters
         self.warmup = warmup
+        self.confidence = (
+            CONFIDENCE_THRESHOLD if confidence is None else float(confidence)
+        )
+        self.audit_transposes = audit_transposes
         self.hits = 0
         self.misses = 0
         self.measurements = 0   # individual candidate timings performed
+        self.predictions = 0    # cold keys dispatched by the cost model
 
     # ---------------------------------------------------------------- lookup
     def lookup(self, spec, dims, dtype) -> tuple[Candidate, float] | None:
-        """Cached (winning candidate, median µs) or ``None`` — no counters."""
-        entry = self.cache.get(canonical_key(spec, dims, dtype))
+        """Cached (winning candidate, median µs) or ``None`` — no counters.
+
+        Hardened against dangling entries whose ``best`` key is missing
+        from ``results`` or unparseable (possible after cross-machine
+        merges or hand-edited caches): those are treated as a miss with
+        a once-per-key warning, never a ``KeyError`` on the serve path.
+        """
+        key = canonical_key(spec, dims, dtype)
+        entry = self.cache.get(key)
         if entry is None:
             return None
-        return Candidate.from_key(entry["best"]), float(entry["results"][entry["best"]])
+        try:
+            best = entry["best"]
+            us = float(entry["results"][best])
+            return Candidate.from_key(best), us
+        except (KeyError, TypeError, ValueError):
+            if key not in _WARNED_DANGLING:
+                _WARNED_DANGLING.add(key)
+                warnings.warn(
+                    f"tuning cache entry for {key!r} is dangling "
+                    f"(best={entry.get('best')!r} not usable); treating as "
+                    f"a miss"
+                )
+            return None
 
     def step_us(self, spec, dims, dtype) -> float | None:
         """Measured best µs for one contraction, for path re-ranking."""
@@ -133,6 +187,10 @@ class Dispatcher:
         (:func:`~repro.tuning.measure.measure_candidates`) so machine
         drift cannot bias the winner.  Counts one measurement per newly
         timed candidate.  Returns the stored entry.
+
+        A prior entry flagged ``"predicted"`` is *discarded*, not
+        merged — its µs are model guesses, and keeping them verbatim
+        would launder a prediction into the training set.
         """
         cs = parse_spec(spec) if isinstance(spec, str) else spec
         from repro.core.contract import infer_dims
@@ -144,31 +202,80 @@ class Dispatcher:
             cands = enumerate_candidates(
                 cs, dims, dtype=dtype, backends=self.backends)
             prior = self.cache.get(key)
+            if prior is not None and prior.get("predicted"):
+                prior = None
             results = dict(prior["results"]) if prior else {}
+            transposes = dict(prior.get("transposes") or {}) if prior else {}
             todo = [c for c in cands if c.key() not in results]
             measured = (
                 measure_candidates(
-                    todo, cs, A, B, iters=self.iters, warmup=self.warmup)
+                    todo, cs, A, B, iters=self.iters, warmup=self.warmup,
+                    audit_transposes=self.audit_transposes)
                 if todo
                 else {}
             )
             self.measurements += len(measured)
             results.update({k: m.us for k, m in measured.items()})
-            best = min(results, key=results.get)
-            auto_key = Candidate("auto", "xla").key()
-            if (
-                best != auto_key
-                and auto_key in results
-                and results[best] > self.TIE_MARGIN * results[auto_key]
-            ):
-                best = auto_key
+            transposes.update({
+                k: m.transposes for k, m in measured.items()
+                if m.transposes is not None
+            })
+            best = pick_best(results, tie_margin=self.TIE_MARGIN)
             entry = {"best": best, "results": results}
+            if transposes:
+                entry["transposes"] = transposes
             self.cache.put(key, entry)
             if sp:
                 sp.set(spec=cs.spec_str(), n_candidates=len(cands),
                        n_measured=len(measured), winner=best,
                        best_us=float(results[best]))
             return entry
+
+    # --------------------------------------------------------------- predict
+    def model(self):
+        """The cost model over this cache — lazily refit on cache change
+        (:func:`repro.tuning.model.model_for` memoizes by fingerprint)."""
+        from repro.tuning.model import model_for
+
+        return model_for(self.cache)
+
+    def predict(self, spec, dims: dict, dtype):
+        """Cost-model verdict for one contraction (``None`` when no
+        candidate family has enough training data)."""
+        cs = parse_spec(spec) if isinstance(spec, str) else spec
+        return self.model().predict(cs, dims, dtype, backends=self.backends)
+
+    def _record_prediction(self, key: str, pred) -> None:
+        """Persist a model pick, flagged distinctly from measured entries."""
+        self.cache.put(key, {
+            "best": pred.candidate.key(),
+            "results": {k: float(v) for k, v in pred.per_candidate.items()},
+            "predicted": True,
+            "confidence": round(float(pred.confidence), 4),
+        })
+
+    def _try_predict(self, cs, dims, dtype):
+        """The ``"predict"`` miss path: a confident model pick, recorded
+        and traced, or ``None`` (caller falls back to measure/analytic)."""
+        pred = self.predict(cs, dims, dtype)
+        if pred is None or pred.confidence < self.confidence:
+            return None
+        self.predictions += 1
+        self._record_prediction(canonical_key(cs, dims, dtype), pred)
+        if _trace.enabled():
+            from repro.obs.roofline import contraction_record
+
+            rec = contraction_record(cs, dims, dtype)
+            _trace.instant(
+                "tuning_predict", "tuning", spec=cs.spec_str(),
+                winner=pred.candidate.key(), predicted_us=float(pred.us),
+                confidence=float(pred.confidence),
+                roofline_bound_us=rec["roofline_bound_us"],
+                predicted_roofline_fraction=(
+                    rec["roofline_bound_us"] / pred.us if pred.us > 0 else 0.0
+                ),
+            )
+        return pred.candidate
 
     # -------------------------------------------------------------- contract
     def contract(
@@ -207,10 +314,15 @@ class Dispatcher:
                     "tuning_miss", "tuning", spec=cs.spec_str(),
                     policy=self.policy, concrete=concrete,
                 )
-            if self.policy != "measure" or not concrete:
-                return analytic()
-            entry = self.tune(cs, A, B)
-            cand = Candidate.from_key(entry["best"])
+            cand = None
+            if self.policy == "predict":
+                # pure arithmetic: a confident pick works under jit too
+                cand = self._try_predict(cs, dims, dtype)
+            if cand is None:
+                if self.policy not in ("measure", "predict") or not concrete:
+                    return analytic()
+                entry = self.tune(cs, A, B)
+                cand = Candidate.from_key(entry["best"])
         else:
             self.hits += 1
             cand = hit[0]
@@ -244,9 +356,16 @@ class Dispatcher:
         :func:`repro.core.contract.record_contractions` around a model
         trace.  Deduplicates by canonical key, skips existing entries, and
         measures the rest on synthetic operands.  Returns summary stats.
+
+        Under the ``"predict"`` policy the warm-up is **predict-first**:
+        each missing key is offered to the cost model, and only the keys
+        it is *not* confident about are measured — warm-up wall-clock
+        drops by the predictor's coverage (``stats["predicted"]`` keys
+        skip their measurement sweeps entirely).
         """
         rng = np.random.default_rng(seed)
-        stats = {"unique": 0, "cached": 0, "tuned": 0, "skipped": 0}
+        stats = {"unique": 0, "cached": 0, "tuned": 0, "predicted": 0,
+                 "skipped": 0}
         seen: set[str] = set()
         with _trace.span("pretune", "tuning") as sp:
             for spec_str, dims, dtype_str in records:
@@ -260,7 +379,11 @@ class Dispatcher:
                 if key in self.cache:
                     stats["cached"] += 1
                     continue
-                if self.policy != "measure":
+                if self.policy == "predict":
+                    if self._try_predict(cs, dims, dtype) is not None:
+                        stats["predicted"] += 1
+                        continue
+                elif self.policy != "measure":
                     stats["skipped"] += 1
                     continue
                 A = jnp.asarray(
@@ -282,6 +405,7 @@ class Dispatcher:
             "hits": self.hits,
             "misses": self.misses,
             "measurements": self.measurements,
+            "predictions": self.predictions,
             "entries": len(self.cache),
             "policy": self.policy,
         }
@@ -296,6 +420,7 @@ class Dispatcher:
         self.hits = 0
         self.misses = 0
         self.measurements = 0
+        self.predictions = 0
 
 
 # -------------------------------------------------------------- path pricing
@@ -306,15 +431,24 @@ def path_cost(steps, dims: dict, dtype, dispatcher: "Dispatcher | None" = None
     ``steps`` may be :class:`~repro.core.einsum.PathStep` or
     :class:`~repro.core.program.ContractionStep` objects — anything with a
     pairwise ``spec`` and analytic ``flops``.  Steps with a cache entry
-    cost their measured best µs; the rest fall back to the flop model
-    bridged by :data:`ANALYTIC_FLOPS_PER_US`.  The second component
-    prefers the path with more measured (trusted) steps on µs ties.
-    This is the objective behind ``optimize="tuned"`` — both the eager
-    re-rank (:func:`repro.core.einsum.contraction_path`) and the
+    cost their recorded best µs (measured *or* model-predicted — a
+    ``"predict"`` dispatcher's recorded picks price exactly as they
+    dispatch).  Cold steps under a ``"predict"`` dispatcher are priced
+    by the cost model when it is confident; the final fallback is the
+    per-step **roofline bound**
+    (:func:`repro.obs.roofline.roofline_bound_us` — hardware ceilings,
+    not the old one-size 10 GFLOP/s :data:`ANALYTIC_FLOPS_PER_US`
+    scalar, which underpriced memory-bound steps by orders of
+    magnitude).  The second component prefers the path with more
+    cache-backed (trusted) steps on µs ties.  This is the objective
+    behind ``optimize="tuned"`` — both the eager re-rank
+    (:func:`repro.core.einsum.contraction_path`) and the
     compiled-program pass (:class:`repro.core.passes.TunedRerankPass`).
     """
+    from repro.obs.roofline import contraction_record
+
     disp = dispatcher or get_dispatcher()
-    total, measured = 0.0, 0
+    total, trusted = 0.0, 0
     for s in steps:
         cs = s.spec if isinstance(s.spec, ContractionSpec) else parse_spec(s.spec)
         us = None
@@ -322,10 +456,15 @@ def path_cost(steps, dims: dict, dtype, dispatcher: "Dispatcher | None" = None
             us = disp.step_us(cs, dims, dtype)
         if us is not None:
             total += us
-            measured += 1
-        else:
-            total += s.flops / ANALYTIC_FLOPS_PER_US
-    return (total, -measured)
+            trusted += 1
+            continue
+        if disp.policy == "predict":
+            pred = disp.predict(cs, dims, dtype)
+            if pred is not None and pred.confidence >= disp.confidence:
+                total += pred.us
+                continue
+        total += contraction_record(cs, dims, dtype)["roofline_bound_us"]
+    return (total, -trusted)
 
 
 # ------------------------------------------------------------------ default

@@ -87,25 +87,29 @@ def measure_candidates(
     *,
     iters: int = 5,
     warmup: int = 2,
+    audit_transposes: bool = False,
 ) -> dict[str, Measurement]:
     """Time a whole candidate set with *interleaved* sampling.
 
     All candidates are jitted and warmed first, then samples alternate
     round-robin across them — so slow machine drift (other tenants, turbo
     states) hits every candidate equally instead of biasing whichever was
-    timed last.  Returns ``{candidate.key(): Measurement}``.
+    timed last.  With ``audit_transposes`` each candidate's optimized HLO
+    is additionally scanned for surviving transposes
+    (:func:`repro.core.contract.count_hlo_ops`) and the count attached to
+    its :class:`Measurement` — the paper's Fig. 1 cost as a per-candidate
+    signal.  Returns ``{candidate.key(): Measurement}``.
     """
-    from repro.core.contract import contract
+    from repro.core.contract import contract, count_hlo_ops
 
-    def make_fn(c: Candidate):
+    def make_raw(c: Candidate):
         tiles = c.tiles_dict or None
-        return jax.jit(
-            lambda a, b: contract(
-                spec, a, b, strategy=c.strategy, backend=c.backend, tiles=tiles
-            )
+        return lambda a, b: contract(
+            spec, a, b, strategy=c.strategy, backend=c.backend, tiles=tiles
         )
 
-    fns = [(c.key(), make_fn(c)) for c in cands]
+    raws = [(c.key(), make_raw(c)) for c in cands]
+    fns = [(k, jax.jit(f)) for k, f in raws]
     for _, f in fns:
         for _ in range(max(warmup, 1)):
             jax.block_until_ready(f(A, B))
@@ -115,7 +119,12 @@ def measure_candidates(
             t0 = time.perf_counter()
             jax.block_until_ready(f(A, B))
             samples[k].append((time.perf_counter() - t0) * 1e6)
+    transposes: dict[str, int | None] = {k: None for k, _ in raws}
+    if audit_transposes:
+        for k, f in raws:
+            transposes[k] = count_hlo_ops(f, A, B, ops=("transpose",))["transpose"]
     return {
-        k: Measurement(us=float(np.median(ts)), iters=iters, warmup=warmup)
+        k: Measurement(us=float(np.median(ts)), iters=iters, warmup=warmup,
+                       transposes=transposes[k])
         for k, ts in samples.items()
     }

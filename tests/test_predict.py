@@ -1,0 +1,342 @@
+"""Predictive autotuning: cost model, "predict" policy, pretune, pricing.
+
+The learned cost model (:mod:`repro.tuning.model`) trains on the tuning
+cache's measured entries and answers cache misses without a measurement
+stall.  Tests here run XLA-only candidates at tiny sizes (same discipline
+as ``test_tuning.py``); the confidence gate is exercised at its two
+deterministic extremes — ``0.0`` (every model verdict dispatches) and
+``1.1`` (nothing does; the policy degrades to measurement) — so no test
+depends on where a particular shape's density score lands.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.notation import parse_spec
+from repro.tuning import (
+    CostModel,
+    Dispatcher,
+    TuningCache,
+    canonical_key,
+    enumerate_candidates,
+    model_for,
+    pick_best,
+    set_dispatcher,
+    valid_entry,
+)
+from repro.tuning.model import N_FEATURES, featurize, parse_cache_key
+
+SPEC = "mk,pkn->pmn"
+
+
+def _dims(n: int) -> dict:
+    return {m: n for m in "mkpn"}
+
+
+def _operands(spec=SPEC, dims=None, dtype=jnp.float32, seed=0):
+    cs = parse_spec(spec)
+    dims = dims or _dims(8)
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.standard_normal([dims[m] for m in cs.a_modes]), dtype)
+    B = jnp.asarray(rng.standard_normal([dims[m] for m in cs.b_modes]), dtype)
+    return A, B
+
+
+def _disp(cache=None, **kw):
+    kw.setdefault("backends", ("xla",))
+    kw.setdefault("iters", 1)
+    kw.setdefault("warmup", 1)
+    return Dispatcher(cache, **kw)
+
+
+def _grid_cache(sizes) -> TuningCache:
+    """A measured cache over a size grid of SPEC (real timings)."""
+    cache = TuningCache(None)
+    d = _disp(cache)
+    for n in sizes:
+        A, B = _operands(dims=_dims(n))
+        d.tune(SPEC, A, B)
+    return cache
+
+
+def _synth_entries(sizes) -> dict:
+    """Noiseless power-law timings: ``us = coef(candidate) * flops``.
+
+    ``xla:direct`` is always fastest (coef 1.0 vs auto's 1.2 — outside
+    the 0.85 tie margin at no size, so the *stored* winner is direct
+    too), giving a known oracle for regret checks.
+    """
+    entries = {}
+    for n in sizes:
+        flops = 2.0 * n**4
+        results = {"xla:auto": 1.2e-4 * flops, "xla:direct": 1.0e-4 * flops}
+        entries[canonical_key(SPEC, _dims(n), jnp.float32)] = {
+            "best": pick_best(results), "results": results,
+        }
+    return entries
+
+
+def _synth_cache(entries, skip=()) -> TuningCache:
+    cache = TuningCache(None)
+    for k, v in entries.items():
+        if k not in skip:
+            cache.put(k, v, persist=False)
+    return cache
+
+
+@pytest.fixture(autouse=True)
+def _no_global_dispatcher():
+    set_dispatcher(None)
+    yield
+    set_dispatcher(None)
+
+
+# -------------------------------------------------------------------- model
+def test_parse_cache_key_round_trip():
+    key = canonical_key(SPEC, _dims(12), jnp.float32, "cpu")
+    cs, dims, dtype_name, plat = parse_cache_key(key)
+    assert canonical_key(cs, dims, dtype_name, plat) == key
+    assert parse_cache_key("garbage") is None
+    assert parse_cache_key("ab,bc->ac|8x8|float32") is None  # missing field
+
+
+def test_featurize_layout_is_stable():
+    for cand in enumerate_candidates(SPEC, _dims(8), backends=("xla",)):
+        x = featurize(parse_spec(SPEC), _dims(8), jnp.float32, cand)
+        assert x.shape == (N_FEATURES,)
+        assert np.isfinite(x).all()
+
+
+def test_leave_one_shape_out_regret_on_synthetic_cache():
+    """The S4 bound: on a noiseless power-law cache, the model's pick for
+    a held-out shape costs within 10 % of the measured oracle."""
+    sizes = (8, 12, 16, 24, 32)
+    entries = _synth_entries(sizes)
+    for n in sizes:
+        key = canonical_key(SPEC, _dims(n), jnp.float32)
+        model = CostModel.from_cache(_synth_cache(entries, skip={key}))
+        pred = model.predict(SPEC, _dims(n), jnp.float32, backends=("xla",))
+        assert pred is not None
+        truth = entries[key]["results"]
+        oracle = min(truth.values())
+        got = truth[pred.candidate.key()]
+        assert (got - oracle) / oracle <= 0.10, f"size {n}"
+
+
+def test_confidence_orders_interpolation_over_extrapolation():
+    model = CostModel.from_cache(_synth_cache(_synth_entries((8, 12, 16, 24, 32))))
+    interp = model.predict(SPEC, _dims(20), jnp.float32, backends=("xla",))
+    alien = model.predict(SPEC, _dims(512), jnp.float32, backends=("xla",))
+    assert interp.confidence > alien.confidence
+    assert 0.0 <= alien.confidence <= 1.0
+
+
+def test_model_needs_min_family_rows():
+    # two shapes → two rows per family, below MIN_FAMILY_ROWS: no verdict
+    model = CostModel.from_cache(_synth_cache(_synth_entries((8, 12))))
+    assert model.predict(SPEC, _dims(10), jnp.float32, backends=("xla",)) is None
+
+
+def test_model_skips_predicted_and_foreign_entries():
+    entries = _synth_entries((8, 12, 16))
+    cache = _synth_cache(entries)
+    baseline = CostModel.from_cache(cache).n_rows
+    cache.put(canonical_key(SPEC, _dims(20), jnp.float32),
+              {"best": "xla:direct", "results": {"xla:direct": 5.0},
+               "predicted": True, "confidence": 0.9}, persist=False)
+    other = canonical_key(SPEC, _dims(24), jnp.float32, "tpu")
+    cache.put(other, {"best": "xla:direct", "results": {"xla:direct": 5.0}},
+              persist=False)
+    assert CostModel.from_cache(cache).n_rows == baseline
+
+
+def test_model_for_refits_only_on_cache_change():
+    cache = _synth_cache(_synth_entries((8, 12, 16)))
+    m1 = model_for(cache)
+    assert model_for(cache) is m1
+    cache.put(canonical_key(SPEC, _dims(24), jnp.float32),
+              {"best": "xla:auto", "results": {"xla:auto": 5.0}},
+              persist=False)
+    assert model_for(cache) is not m1
+
+
+# ----------------------------------------------------------- predict policy
+def test_predict_policy_dispatches_and_records_flagged_entry():
+    cache = _grid_cache((8, 12, 16))
+    rows_before = CostModel.from_cache(cache).n_rows
+    dp = _disp(cache, policy="predict", confidence=0.0)
+    dims = _dims(10)
+    A, B = _operands(dims=dims)
+    got = dp.contract(SPEC, A, B)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.einsum(SPEC, A, B)),
+                               rtol=2e-5, atol=2e-5)
+    assert dp.stats == {"hits": 0, "misses": 1, "measurements": 0,
+                        "predictions": 1, "entries": 4, "policy": "predict"}
+    entry = cache.get(canonical_key(SPEC, dims, jnp.float32))
+    assert entry["predicted"] is True and 0.0 <= entry["confidence"] <= 1.0
+    assert valid_entry(entry)
+    # the recorded pick is a plain hit from now on
+    dp.contract(SPEC, A, B)
+    assert dp.hits == 1 and dp.predictions == 1
+    # ... and never becomes training data
+    assert CostModel.from_cache(cache).n_rows == rows_before
+
+
+def test_predict_below_confidence_falls_back_to_measurement():
+    cache = _grid_cache((8, 12, 16))
+    dp = _disp(cache, policy="predict", confidence=1.1)  # unattainable
+    A, B = _operands(dims=_dims(10))
+    dp.contract(SPEC, A, B)
+    assert dp.predictions == 0 and dp.measurements > 0
+    entry = cache.get(canonical_key(SPEC, _dims(10), jnp.float32))
+    assert not entry.get("predicted")
+
+
+def test_predict_survives_jit_measurement_does_not():
+    cache = _grid_cache((8, 12, 16))
+    # confident pick: pure arithmetic, dispatches under a trace
+    dp = _disp(cache, policy="predict", confidence=0.0)
+    A, B = _operands(dims=_dims(10))
+    got = jax.jit(lambda a, b: dp.contract(SPEC, a, b))(A, B)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.einsum(SPEC, A, B)),
+                               rtol=2e-5, atol=2e-5)
+    assert dp.predictions == 1 and dp.measurements == 0
+    # unconfident: tracers cannot be timed → analytic fallback, no crash
+    cache2 = _grid_cache((8, 12, 16))
+    dp2 = _disp(cache2, policy="predict", confidence=1.1)
+    got = jax.jit(lambda a, b: dp2.contract(SPEC, a, b))(A, B)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.einsum(SPEC, A, B)),
+                               rtol=2e-5, atol=2e-5)
+    assert dp2.predictions == 0 and dp2.measurements == 0
+
+
+def test_tune_discards_predicted_prior():
+    """A later real tune must re-measure from scratch — merging a model
+    guess into measured results would launder it into the training set."""
+    cache = _grid_cache((8, 12, 16))
+    dp = _disp(cache, policy="predict", confidence=0.0)
+    dims = _dims(10)
+    A, B = _operands(dims=dims)
+    dp.contract(SPEC, A, B)
+    assert cache.get(canonical_key(SPEC, dims, jnp.float32))["predicted"]
+
+    dm = _disp(cache)
+    entry = dm.tune(SPEC, A, B)
+    assert not entry.get("predicted")
+    n_cands = len(enumerate_candidates(SPEC, dims, backends=("xla",)))
+    assert dm.measurements == n_cands  # full sweep, nothing inherited
+
+
+def test_predict_emits_tuning_predict_instant():
+    from repro.obs import trace as obs_trace
+
+    cache = _grid_cache((8, 12, 16))
+    dp = _disp(cache, policy="predict", confidence=0.0)
+    tracer = obs_trace.enable_tracing(obs_trace.Tracer())
+    try:
+        dims = _dims(10)
+        A, B = _operands(dims=dims)
+        dp.contract(SPEC, A, B)
+    finally:
+        obs_trace.disable_tracing()
+        obs_trace.set_tracer(None)
+    (ev,) = [e for e in tracer.events() if e["name"] == "tuning_predict"]
+    args = ev["args"]
+    assert args["winner"] == cache.get(
+        canonical_key(SPEC, dims, jnp.float32))["best"]
+    assert args["predicted_us"] > 0 and 0.0 <= args["confidence"] <= 1.0
+    assert args["roofline_bound_us"] > 0
+    assert args["predicted_roofline_fraction"] > 0
+
+
+# ------------------------------------------------------------- path pricing
+def test_path_cost_prices_cold_steps_by_roofline_then_model():
+    from repro.obs.roofline import contraction_record
+    from repro.tuning.dispatch import path_cost
+
+    class Step:
+        def __init__(self, spec):
+            self.spec = spec
+
+    dims = _dims(8)
+    steps = [Step(SPEC)]
+    # cold cache, no model: per-step roofline bound, zero trusted steps
+    d = _disp(None, policy="cached")
+    total, trusted = path_cost(steps, dims, jnp.float32, d)
+    bound = contraction_record(parse_spec(SPEC), dims,
+                               jnp.float32)["roofline_bound_us"]
+    assert total == pytest.approx(bound) and trusted == 0
+    # a cache entry prices at its recorded winner µs and counts trusted
+    d.cache.put(canonical_key(SPEC, dims, jnp.float32),
+                {"best": "xla:auto", "results": {"xla:auto": 7.5}})
+    total, trusted = path_cost(steps, dims, jnp.float32, d)
+    assert total == pytest.approx(7.5) and trusted == -1
+    # predict dispatcher: a cold step is priced by the confident model
+    cache = _grid_cache((8, 12, 16))
+    dp = _disp(cache, policy="predict", confidence=0.0)
+    dims10 = _dims(10)
+    pred = dp.predict(parse_spec(SPEC), dims10, jnp.float32)
+    total, trusted = path_cost([Step(SPEC)], dims10, jnp.float32, dp)
+    assert total == pytest.approx(pred.us) and trusted == 0
+
+
+# ------------------------------------------------------------------ pretune
+def test_pretune_predict_first_measures_only_low_confidence_keys():
+    cache = _grid_cache((8, 12, 16))
+    records = [
+        (SPEC, _dims(8), "float32"),    # already cached
+        (SPEC, _dims(10), "float32"),   # cold but predictable
+    ]
+    dp = _disp(cache, policy="predict", confidence=0.0)
+    assert dp.pretune(records) == {"unique": 2, "cached": 1, "tuned": 0,
+                                   "predicted": 1, "skipped": 0}
+    assert dp.measurements == 0
+    # below the gate the same cold key pays the measurement sweep
+    dp2 = _disp(_grid_cache((8, 12, 16)), policy="predict", confidence=1.1)
+    stats = dp2.pretune([(SPEC, _dims(10), "float32")])
+    assert stats["predicted"] == 0 and stats["tuned"] == 1
+    assert dp2.measurements > 0
+
+
+def test_serve_engine_threads_tune_policy(tmp_path):
+    from repro.configs import get_config
+    from repro.models.transformer import Model
+    from repro.serving.engine import ServeEngine
+
+    cfg = get_config("minicpm-2b", smoke=True).with_(n_periods=1)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    path = tmp_path / "t.json"
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, pretune=True,
+                      tuner=_disp(path))  # measured warm start
+    n = eng.pretune_stats["unique"]
+    assert eng.pretune_stats["tuned"] == n
+
+    # warm cache + predict policy: recorded winners pre-empt the model —
+    # zero measurements AND zero predictions (PR 2 semantics untouched)
+    eng2 = ServeEngine(cfg, params, slots=2, max_len=64, pretune=True,
+                       tuning_cache=path, tune_policy="predict")
+    assert eng2.tuner.policy == "predict"
+    st = eng2.pretune_stats
+    assert st["cached"] == st["unique"] == n
+    assert st["dispatcher"]["measurements"] == 0
+    assert st["dispatcher"]["predictions"] == 0
+
+    # predict-first coverage: with one entry evicted, a forced-confident
+    # dispatcher answers it from the model instead of re-measuring
+    cache = TuningCache(path)
+    del cache.entries[next(iter(cache.entries))]
+    tuner3 = _disp(cache, policy="predict", confidence=0.0)
+    eng3 = ServeEngine(cfg, params, slots=2, max_len=64, pretune=True,
+                       tuner=tuner3)
+    st3 = eng3.pretune_stats
+    assert st3["cached"] == st3["unique"] - 1
+    if st3["predicted"]:  # model had ≥ MIN_FAMILY_ROWS training rows
+        assert st3["dispatcher"]["measurements"] == 0
+    else:                 # too sparse to predict: measured fallback
+        assert st3["tuned"] == 1

@@ -1,0 +1,161 @@
+"""Benchmark history ledger: every artifact run appends one JSONL record.
+
+The JSON artifacts (``BENCH_runtime.json``, ``BENCH_predict.json``,
+``BENCH_obs.json``) are *latest-value* snapshots — good for eyeballing a
+PR, useless for noticing a slow three-PR slide.  This module gives them
+a time axis: after each artifact write, :func:`append_record` extracts
+the few headline metrics that matter (declared per module in
+:data:`METRICS`, each with a better-direction and noise tolerances) and
+appends ``{t, module, quick, metrics}`` to ``BENCH_history.jsonl``
+next to the artifacts (``REPRO_BENCH_DIR`` overrides, same as the
+artifacts themselves).
+
+Records carry a ``quick`` flag because quick-profile numbers live in a
+different regime (smaller problems, fewer repeats) — the regression
+sentinel (:mod:`benchmarks.sentinel`) never compares across cohorts.
+
+The ledger is append-only JSONL: concurrent appends interleave whole
+lines (single ``write`` of one line), malformed lines are skipped on
+load, and the file is gitignored — it is per-machine state, like the
+tuning cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+__all__ = [
+    "MetricSpec",
+    "METRICS",
+    "HISTORY_NAME",
+    "history_path",
+    "extract_metrics",
+    "append_record",
+    "load_history",
+]
+
+HISTORY_NAME = "BENCH_history.jsonl"
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One tracked headline metric of a benchmark module's payload.
+
+    ``path`` dots into the module's ``LAST_RESULTS``; ``direction`` says
+    which way is better; a change is only a regression when it is worse
+    by more than ``max(rel_tol * |baseline|, abs_tol)`` — both
+    tolerances exist because ratio metrics near zero (overhead
+    fractions) need an absolute floor while throughput metrics need a
+    relative one.
+    """
+
+    name: str                    # short id used in records/reports
+    path: str                    # dotted path into LAST_RESULTS
+    direction: str               # "higher" | "lower" is better
+    rel_tol: float = 0.25        # relative noise allowance
+    abs_tol: float = 0.0         # absolute noise allowance
+
+
+#: module → headline metrics the sentinel watches.  Tolerances are
+#: deliberately loose: these runs share CI machines with everything
+#: else, and a sentinel that cries wolf gets deleted, not fixed.
+METRICS: dict[str, tuple[MetricSpec, ...]] = {
+    "fig14_runtime": (
+        MetricSpec("tok_per_s", "runtime.tok_per_s", "higher", rel_tol=0.30),
+    ),
+    "fig15_predict": (
+        MetricSpec("regret_pct", "regret_pct.median", "lower",
+                   rel_tol=0.50, abs_tol=2.0),
+        MetricSpec("coldstart_speedup", "coldstart.speedup", "higher",
+                   rel_tol=0.40),
+    ),
+    "obs_overhead": (
+        MetricSpec("obs_overhead_frac", "enabled_overhead_frac", "lower",
+                   rel_tol=0.0, abs_tol=0.04),
+    ),
+}
+
+
+def history_path(path: str | None = None) -> str:
+    """Resolve the ledger path (explicit > ``REPRO_BENCH_DIR`` > repo root)."""
+    if path:
+        return path
+    out_dir = os.environ.get(
+        "REPRO_BENCH_DIR",
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    return os.path.join(out_dir, HISTORY_NAME)
+
+
+def _dig(payload: dict, dotted: str):
+    cur = payload
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def extract_metrics(module: str, payload: dict) -> dict[str, float]:
+    """The declared headline metrics present in ``payload`` (missing or
+    non-numeric paths are skipped — schema growth must not break the
+    ledger)."""
+    out: dict[str, float] = {}
+    for spec in METRICS.get(module, ()):
+        v = _dig(payload, spec.path)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[spec.name] = float(v)
+    return out
+
+
+def append_record(module: str, payload: dict, *, quick: bool,
+                  path: str | None = None, t: float | None = None
+                  ) -> dict | None:
+    """Append one history record; returns it (``None`` when the module
+    declares no metrics or the payload carries none of them)."""
+    metrics = extract_metrics(module, payload)
+    if not metrics:
+        return None
+    rec = {
+        "t": float(t if t is not None else time.time()),
+        "module": module,
+        "quick": bool(quick),
+        "metrics": metrics,
+    }
+    p = history_path(path)
+    os.makedirs(os.path.dirname(os.path.abspath(p)), exist_ok=True)
+    with open(p, "a", encoding="utf-8") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+    return rec
+
+
+def load_history(path: str | None = None, *, module: str | None = None,
+                 quick: bool | None = None) -> list[dict]:
+    """Ledger records in file order, optionally filtered to one module
+    and/or one quick-cohort.  Malformed lines are skipped (the ledger
+    outlives schema mistakes), a missing file is an empty history."""
+    p = history_path(path)
+    if not os.path.exists(p):
+        return []
+    out: list[dict] = []
+    with open(p, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                continue
+            if not (isinstance(rec, dict) and isinstance(rec.get("module"), str)
+                    and isinstance(rec.get("metrics"), dict)):
+                continue
+            if module is not None and rec["module"] != module:
+                continue
+            if quick is not None and bool(rec.get("quick")) != quick:
+                continue
+            out.append(rec)
+    return out

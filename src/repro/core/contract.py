@@ -211,7 +211,9 @@ def _annotate_contraction(sp, spec, A, B, strategy, backend, tiles, mesh):
                  or isinstance(B, jax.core.Tracer))
     sp.set(
         strategy=strategy, backend=backend, eager=eager,
-        sharded=mesh is not None, **contraction_record(cs, dims, dtype),
+        sharded=mesh is not None,
+        dims={m: int(v) for m, v in dims.items()},
+        **contraction_record(cs, dims, dtype),
     )
     if tiles:
         sp.set(tiles=dict(tiles))

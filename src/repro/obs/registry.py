@@ -24,13 +24,24 @@ runtime's sources in under the conventional names ``serving`` /
 
 from __future__ import annotations
 
+import threading
+
 __all__ = ["MetricsRegistry", "get_registry", "set_registry"]
 
 
 class MetricsRegistry:
-    """Named metric sources + free counters behind one snapshot call."""
+    """Named metric sources + free counters behind one snapshot call.
+
+    Thread-safe where it must be: :meth:`counter` is a read-modify-write
+    the serving runtime and pretune warm-up can hit from concurrent
+    contexts, so counter bumps and source (un)registration are guarded
+    by one lock.  Snapshots copy the source table under the lock but
+    *call* the sources outside it — a slow or re-entrant source must not
+    block every counter bump in the process.
+    """
 
     def __init__(self):
+        self._lock = threading.Lock()
         self._sources: dict[str, object] = {}
         self._counters: dict[str, float] = {}
 
@@ -40,43 +51,52 @@ class MetricsRegistry:
         a dict of metric values."""
         if not callable(source):
             raise TypeError(f"source {name!r} must be callable")
-        self._sources[str(name)] = source
+        with self._lock:
+            self._sources[str(name)] = source
 
     def unregister(self, name: str) -> None:
-        self._sources.pop(name, None)
+        with self._lock:
+            self._sources.pop(name, None)
 
     def sources(self) -> tuple[str, ...]:
-        return tuple(sorted(self._sources))
+        with self._lock:
+            return tuple(sorted(self._sources))
 
     # -------------------------------------------------------------- counters
     def counter(self, name: str, inc: float = 1) -> float:
-        """Bump (and return) a registry-owned counter."""
-        v = self._counters.get(name, 0) + inc
-        self._counters[name] = v
-        return v
+        """Bump (and return) a registry-owned counter (atomic)."""
+        with self._lock:
+            v = self._counters.get(name, 0) + inc
+            self._counters[name] = v
+            return v
 
     def reset_counters(self) -> None:
-        self._counters.clear()
+        with self._lock:
+            self._counters.clear()
 
     # -------------------------------------------------------------- snapshot
     def snapshot(self) -> dict:
         """``{source_name: source_dict}`` (+ ``"counters"`` when any) —
         every source called now.  A raising source contributes
         ``{"error": "<Type>: <msg>"}`` instead of propagating."""
+        with self._lock:
+            sources = dict(self._sources)
+            counters = dict(self._counters)
         out: dict[str, dict] = {}
-        for name in sorted(self._sources):
+        for name in sorted(sources):
             try:
-                val = self._sources[name]()
+                val = sources[name]()
                 out[name] = dict(val) if val is not None else {}
             except Exception as e:  # keep the rest of the snapshot alive
                 out[name] = {"error": f"{type(e).__name__}: {e}"}
-        if self._counters:
-            out["counters"] = dict(self._counters)
+        if counters:
+            out["counters"] = counters
         return out
 
     def clear(self) -> None:
-        self._sources.clear()
-        self._counters.clear()
+        with self._lock:
+            self._sources.clear()
+            self._counters.clear()
 
 
 # --------------------------------------------------------------------------

@@ -155,6 +155,10 @@ class ServingRuntime:
         )
         self.buckets = BucketTable()
         self.metrics = ServingMetrics(slots, **({"clock": clock} if clock else {}))
+        #: optional callable fed each decode step's logits (the numerics
+        #: probe installs here — see repro.obs.health.NumericsProbe);
+        #: ``None`` keeps the decode path at a single branch.
+        self.logits_probe = None
         if self.paged:
             self.pool = PagePool(
                 pages, self.page_size, max_rows=max_len,
@@ -663,6 +667,8 @@ class ServingRuntime:
                 self.params, self.cache, jnp.asarray(self._tokens),
                 jnp.asarray(idx),
             )
+        if self.logits_probe is not None:
+            self.logits_probe(logits)
         self.metrics.on_decode(n, bucket)
         if self.greedy:
             nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
@@ -705,6 +711,8 @@ class ServingRuntime:
             self.params, self.kv.pool, jnp.asarray(tables),
             jnp.asarray(lengths), jnp.asarray(toks),
         )
+        if self.logits_probe is not None:
+            self.logits_probe(logits)
         self.metrics.on_decode(n, bucket)
         if self.greedy:
             nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))

@@ -197,6 +197,20 @@ class TuningCache:
         if persist:
             self.save()
 
+    def drop(self, key: str, *, persist: bool = True) -> bool:
+        """Evict one entry (drift remediation: a stale winner must be
+        re-measured, not served).  Bumps the fingerprint, so memoized
+        consumers — the cost model via
+        :func:`repro.tuning.model.model_for`, tuned program signatures —
+        refit/recompile on next use.  Returns whether the key existed."""
+        if key not in self.entries:
+            return False
+        del self.entries[key]
+        self._version += 1
+        if persist:
+            self.save()
+        return True
+
     def __contains__(self, key: str) -> bool:
         return key in self.entries
 

@@ -1,0 +1,824 @@
+"""Fleet-health layer: time-series, watchdogs, drift, history sentinel.
+
+Covers the bounded time-series primitives (ring series, P² streaming
+quantiles, the registry sampler with JSONL/Prometheus exposition), the
+SLO watchdog pack (edge-triggered alerts, healthy-series silence), the
+sampled NaN/Inf numerics probe on the live decode path, tuning-drift
+detection end-to-end (corrupt a cache entry, replay the working set,
+assert flag → evict → re-measure → cost-model retrain), and the
+benchmark history ledger + regression sentinel pair.
+"""
+
+import json
+import math
+import random
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import trace
+from repro.obs.health import (
+    Alert,
+    DecodeStallWatchdog,
+    HealthMonitor,
+    NumericsProbe,
+    PagePoolPressureWatchdog,
+    RecompileStormWatchdog,
+    default_watchdogs,
+)
+from repro.obs.registry import MetricsRegistry
+from repro.obs.timeseries import (
+    MetricsSampler,
+    P2Quantile,
+    StreamingHistogram,
+    TimeSeries,
+    prom_name,
+)
+
+
+class FakeClock:
+    """Deterministic seconds clock; advance() moves time forward."""
+
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, seconds: float) -> None:
+        self.t += seconds
+
+
+@pytest.fixture(autouse=True)
+def _isolate_process_tracer():
+    yield
+    trace.disable_tracing()
+    trace.set_tracer(None)
+
+
+# ======================================================================
+# TimeSeries
+# ======================================================================
+
+class TestTimeSeries:
+    def test_append_and_points(self):
+        s = TimeSeries(capacity=8)
+        for i in range(5):
+            s.append(float(i), float(i * 10))
+        assert s.points() == [(float(i), float(i * 10)) for i in range(5)]
+        assert s.latest() == 40.0
+        assert s.total == 5 and s.dropped == 0 and len(s) == 5
+
+    def test_ring_overflow_keeps_newest(self):
+        s = TimeSeries(capacity=4)
+        for i in range(10):
+            s.append(float(i), float(i))
+        assert s.values() == [6.0, 7.0, 8.0, 9.0]
+        assert s.total == 10 and s.dropped == 6 and len(s) == 4
+
+    def test_delta_windows(self):
+        s = TimeSeries(capacity=16)
+        for i in range(6):
+            s.append(float(i), float(i * 3))
+        assert s.delta(1) == 3.0
+        assert s.delta(5) == 15.0
+        assert s.delta(6) is None          # not enough samples
+        assert s.delta(0) is None
+
+    def test_empty(self):
+        s = TimeSeries(4)
+        assert s.latest() is None and s.points() == [] and s.delta(1) is None
+
+    def test_capacity_validation(self):
+        with pytest.raises(ValueError):
+            TimeSeries(0)
+
+
+# ======================================================================
+# P² quantiles / streaming histogram
+# ======================================================================
+
+class TestP2Quantile:
+    @pytest.mark.parametrize("p", [0.5, 0.9, 0.99])
+    def test_accuracy_gaussian(self, p):
+        rng = random.Random(7)
+        q = P2Quantile(p)
+        xs = [rng.gauss(0.0, 1.0) for _ in range(20000)]
+        for x in xs:
+            q.observe(x)
+        xs.sort()
+        exact = xs[int(p * (len(xs) - 1))]
+        assert q.value() == pytest.approx(exact, abs=0.08)
+
+    def test_accuracy_lognormal(self):
+        rng = random.Random(11)
+        q = P2Quantile(0.9)
+        xs = [math.exp(rng.gauss(0.0, 1.0)) for _ in range(20000)]
+        for x in xs:
+            q.observe(x)
+        xs.sort()
+        exact = xs[int(0.9 * (len(xs) - 1))]
+        assert q.value() == pytest.approx(exact, rel=0.1)
+
+    def test_exact_below_five_samples(self):
+        q = P2Quantile(0.5)
+        assert q.value() is None
+        for x in (3.0, 1.0, 2.0):
+            q.observe(x)
+        assert q.value() == 2.0            # exact median of 3
+
+    def test_constant_stream(self):
+        q = P2Quantile(0.9)
+        for _ in range(100):
+            q.observe(5.0)
+        assert q.value() == 5.0
+
+    def test_p_validation(self):
+        for bad in (0.0, 1.0, -1, 2):
+            with pytest.raises(ValueError):
+                P2Quantile(bad)
+
+    def test_bounded_memory(self):
+        q = P2Quantile(0.99)
+        for i in range(50000):
+            q.observe(float(i % 997))
+        assert len(q._q) == 5              # five markers, forever
+
+
+class TestStreamingHistogram:
+    def test_summary_shape(self):
+        h = StreamingHistogram()
+        for x in range(1, 101):
+            h.observe(float(x))
+        s = h.summary()
+        assert s["count"] == 100
+        assert s["sum"] == pytest.approx(5050.0)
+        assert s["mean"] == pytest.approx(50.5)
+        assert s["min"] == 1.0 and s["max"] == 100.0
+        assert s["p50"] == pytest.approx(50.0, abs=3)
+        assert s["p99"] == pytest.approx(99.0, abs=3)
+
+    def test_empty_summary(self):
+        s = StreamingHistogram().summary()
+        assert s["count"] == 0 and s["min"] is None and s["p50"] is None
+
+
+# ======================================================================
+# MetricsSampler
+# ======================================================================
+
+class TestMetricsSampler:
+    def _reg(self, state):
+        reg = MetricsRegistry()
+        reg.register("serving", lambda: {
+            "ticks": state["ticks"], "tokens_out": state["toks"],
+            "busy": True,                   # bool: must be skipped
+            "label": "x",                   # non-numeric: skipped
+        })
+        return reg
+
+    def test_series_fanout_and_skips(self):
+        state = {"ticks": 0, "toks": 0}
+        smp = MetricsSampler(self._reg(state), clock=FakeClock())
+        for i in range(3):
+            state["ticks"], state["toks"] = i, i * 2
+            smp.sample()
+        assert set(smp.series) == {"serving.ticks", "serving.tokens_out"}
+        assert smp.get("serving.tokens_out").values() == [0.0, 2.0, 4.0]
+        assert smp.samples == 3
+        assert smp.latest() == {"serving.ticks": 2, "serving.tokens_out": 4}
+
+    def test_interval_gating(self):
+        clk = FakeClock()
+        state = {"ticks": 0, "toks": 0}
+        smp = MetricsSampler(self._reg(state), interval_s=1.0, clock=clk)
+        assert smp.maybe_sample() is True
+        assert smp.maybe_sample() is False   # same instant: gated
+        clk.advance(0.5)
+        assert smp.maybe_sample() is False
+        clk.advance(0.6)
+        assert smp.maybe_sample() is True
+        assert smp.samples == 2
+
+    def test_jsonl_append(self, tmp_path):
+        path = str(tmp_path / "m.jsonl")
+        state = {"ticks": 1, "toks": 5}
+        smp = MetricsSampler(self._reg(state), clock=FakeClock(),
+                             jsonl_path=path)
+        smp.sample()
+        state["toks"] = 7
+        smp.sample()
+        lines = [json.loads(ln) for ln in open(path)]
+        assert len(lines) == 2
+        assert lines[0]["serving.tokens_out"] == 5
+        assert lines[1]["serving.tokens_out"] == 7
+        assert all("t" in ln for ln in lines)
+
+    def test_histograms(self):
+        state = {"ticks": 0, "toks": 0}
+        smp = MetricsSampler(self._reg(state), clock=FakeClock(),
+                             hist_metrics=("serving.tokens_out",))
+        for i in range(10):
+            state["toks"] = i
+            smp.sample()
+        h = smp.histograms["serving.tokens_out"]
+        assert h.count == 10 and h.max == 9.0
+
+    def test_prometheus_text(self):
+        state = {"ticks": 3, "toks": 12}
+        smp = MetricsSampler(self._reg(state), clock=FakeClock(),
+                             hist_metrics=("serving.tokens_out",))
+        smp.sample()
+        txt = smp.prometheus_text()
+        assert "# TYPE repro_serving_ticks gauge\nrepro_serving_ticks 3" in txt
+        assert "# TYPE repro_serving_tokens_out_summary summary" in txt
+        assert 'repro_serving_tokens_out_summary{quantile="0.5"} 12' in txt
+        assert "repro_serving_tokens_out_summary_count 1" in txt
+        assert txt.endswith("\n")
+
+    def test_write_prometheus(self, tmp_path):
+        state = {"ticks": 1, "toks": 2}
+        smp = MetricsSampler(self._reg(state), clock=FakeClock())
+        smp.sample()
+        p = tmp_path / "metrics.prom"
+        smp.write_prometheus(str(p))
+        assert "repro_serving_ticks 1" in p.read_text()
+
+    def test_series_bounded(self):
+        state = {"ticks": 0, "toks": 0}
+        smp = MetricsSampler(self._reg(state), capacity=8, clock=FakeClock())
+        for i in range(100):
+            state["ticks"] = i
+            smp.sample()
+        ser = smp.get("serving.ticks")
+        assert len(ser) == 8 and ser.dropped == 92
+        assert ser.values()[-1] == 99.0
+
+    def test_prom_name_sanitization(self):
+        assert prom_name("serving.tokens_out") == "repro_serving_tokens_out"
+        assert prom_name("9lives!") == "repro__9lives_"
+
+
+# ======================================================================
+# Watchdogs
+# ======================================================================
+
+def _serving_registry(state):
+    reg = MetricsRegistry()
+    reg.register("serving", lambda: {
+        "ticks": state.get("ticks", 0),
+        "tokens_out": state.get("toks", 0),
+        "requests_done": state.get("done", 0),
+    })
+    if "compiles" in state:
+        reg.register("buckets", lambda: {
+            "bucket_compiles": state["compiles"]})
+    if "free" in state:
+        reg.register("pages", lambda: {
+            "pages_free": state["free"], "pages_total": state["total"]})
+    return reg
+
+
+class TestDecodeStall:
+    def test_fires_on_flat_progress(self):
+        state = {"ticks": 0, "toks": 0}
+        mon = HealthMonitor(
+            MetricsSampler(_serving_registry(state), clock=FakeClock()),
+            watchdogs=[DecodeStallWatchdog(budget=3)])
+        for _ in range(4):                 # healthy: tokens flow
+            state["ticks"] += 1
+            state["toks"] += 2
+            assert mon.tick() == []
+        fired = []
+        for _ in range(6):                 # wedged: ticks spin, no tokens
+            state["ticks"] += 1
+            fired += mon.tick()
+        assert [a.name for a in fired] == ["decode_stall"]
+        assert fired[0].severity == "critical"
+        assert fired[0].attrs["ticks_elapsed"] >= 3
+
+    def test_edge_triggered_rearms_after_clear(self):
+        state = {"ticks": 0, "toks": 0}
+        mon = HealthMonitor(
+            MetricsSampler(_serving_registry(state), clock=FakeClock()),
+            watchdogs=[DecodeStallWatchdog(budget=2)])
+        def spin(n, tokens):
+            out = []
+            for _ in range(n):
+                state["ticks"] += 1
+                state["toks"] += tokens
+                out += mon.tick()
+            return out
+        assert len(spin(5, 0)) == 1        # one alert for the whole stall
+        assert spin(4, 3) == []            # recovery clears
+        assert len(spin(5, 0)) == 1        # re-armed: second stall fires
+
+    def test_quiet_runtime_never_fires(self):
+        # ticks not advancing either (idle, not stalled)
+        state = {"ticks": 5, "toks": 5}
+        mon = HealthMonitor(
+            MetricsSampler(_serving_registry(state), clock=FakeClock()),
+            watchdogs=[DecodeStallWatchdog(budget=2)])
+        for _ in range(6):
+            assert mon.tick() == []
+
+
+class TestRecompileStorm:
+    def test_warmup_compiles_free_then_storm(self):
+        state = {"ticks": 0, "toks": 0, "compiles": 0}
+        mon = HealthMonitor(
+            MetricsSampler(_serving_registry(state), clock=FakeClock()),
+            watchdogs=[RecompileStormWatchdog(warmup=3)])
+        for c in (1, 3, 5):                # legit warm-up compilation
+            state["compiles"] = c
+            assert mon.tick() == []
+        state["toks"] += 1
+        assert mon.tick() == []            # steady after warm-up
+        state["compiles"] = 7              # the contract breaks
+        (alert,) = mon.tick()
+        assert alert.name == "recompile_storm"
+        assert alert.attrs["recompiles"] == 2
+        assert alert.attrs["baseline"] == 5
+
+    def test_no_bucket_source_never_fires(self):
+        state = {"ticks": 1, "toks": 1}
+        mon = HealthMonitor(
+            MetricsSampler(_serving_registry(state), clock=FakeClock()),
+            watchdogs=[RecompileStormWatchdog(warmup=1)])
+        for _ in range(4):
+            assert mon.tick() == []
+
+
+class TestPagePoolPressure:
+    def test_fires_below_threshold(self):
+        state = {"ticks": 0, "toks": 0, "free": 50, "total": 100}
+        mon = HealthMonitor(
+            MetricsSampler(_serving_registry(state), clock=FakeClock()),
+            watchdogs=[PagePoolPressureWatchdog(min_free_frac=0.1)])
+        assert mon.tick() == []
+        state["free"] = 5                  # 5% free < 10% threshold
+        (alert,) = mon.tick()
+        assert alert.name == "pool_pressure"
+        assert alert.attrs["free_frac"] == pytest.approx(0.05)
+        state["free"] = 40                 # recovery re-arms
+        assert mon.tick() == []
+        state["free"] = 0
+        (alert2,) = mon.tick()
+        assert alert2.attrs["pages_free"] == 0
+
+    def test_unpaged_runtime_never_fires(self):
+        state = {"ticks": 1, "toks": 1}    # no pages source
+        mon = HealthMonitor(
+            MetricsSampler(_serving_registry(state), clock=FakeClock()),
+            watchdogs=[PagePoolPressureWatchdog()])
+        assert mon.tick() == []
+
+
+class TestHealthMonitor:
+    def test_default_pack(self):
+        names = {w.name for w in default_watchdogs()}
+        assert names == {"decode_stall", "recompile_storm", "pool_pressure"}
+
+    def test_alerts_bounded_and_counted(self):
+        mon = HealthMonitor(MetricsSampler(MetricsRegistry(),
+                                           clock=FakeClock()),
+                            watchdogs=[], max_alerts=4)
+        for i in range(10):
+            mon.fire(Alert("a", "warning", "m", {}))
+        assert len(mon.alerts) == 4
+        assert mon.alert_counts == {"a": 10}
+        assert mon.stats()["alerts_total"] == 10
+        assert mon.stats()["alerts_a"] == 10
+
+    def test_alert_emits_trace_instant_and_callback(self):
+        t = trace.enable_tracing(trace.Tracer())
+        seen = []
+        mon = HealthMonitor(MetricsSampler(MetricsRegistry(),
+                                           clock=FakeClock()),
+                            watchdogs=[], on_alert=seen.append)
+        mon.fire(Alert("boom", "critical", "bad", {"x": 1}))
+        trace.disable_tracing()
+        assert [a.name for a in seen] == ["boom"]
+        (ev,) = [e for e in t.events() if e["cat"] == "health"]
+        assert ev["name"] == "boom" and ev["ph"] == "i"
+        assert ev["args"]["severity"] == "critical"
+        assert ev["args"]["x"] == 1
+
+    def test_register_exposes_sources(self):
+        reg = MetricsRegistry()
+        mon = HealthMonitor(MetricsSampler(reg, clock=FakeClock()),
+                            watchdogs=[])
+        mon.register()
+        snap = reg.snapshot()
+        assert snap["health"]["checks"] == 0
+        assert snap["timeseries"]["samples"] == 0
+
+
+# ======================================================================
+# Numerics probe
+# ======================================================================
+
+class TestNumericsProbe:
+    def _mon(self):
+        return HealthMonitor(MetricsSampler(MetricsRegistry(),
+                                            clock=FakeClock()),
+                             watchdogs=[])
+
+    def test_sampled_probing(self):
+        mon = self._mon()
+        probe = NumericsProbe(mon, every=4)
+        finite = jnp.ones((2, 3))
+        for _ in range(8):
+            probe(finite)
+        assert probe.calls == 8 and probe.probes == 2
+        assert probe.failures == 0 and mon.alerts == []
+
+    def test_nan_fires_critical(self):
+        mon = self._mon()
+        probe = NumericsProbe(mon, every=1)
+        probe(jnp.array([[1.0, float("nan")]]))
+        assert probe.failures == 1
+        (alert,) = mon.alerts
+        assert alert.name == "nonfinite_logits"
+        assert alert.severity == "critical"
+        probe(jnp.array([[float("inf"), 0.0]]))
+        assert probe.failures == 2
+
+    def test_every_validation(self):
+        with pytest.raises(ValueError):
+            NumericsProbe(self._mon(), every=0)
+
+    def test_live_decode_path(self):
+        """attach() installs the probe on a real runtime's decode loop."""
+        from repro.configs import get_config
+        from repro.models.transformer import Model
+        from repro.runtime.engine import ServingRuntime
+        from repro.runtime.scheduler import Request
+
+        cfg = get_config("minicpm-2b", smoke=True).with_(n_periods=1)
+        params = Model(cfg).init(jax.random.PRNGKey(0))
+        rt = ServingRuntime(cfg, params, slots=2, max_len=64,
+                            prefill_chunk=8, precompile=False)
+        mon = HealthMonitor(MetricsSampler(MetricsRegistry(),
+                                           clock=FakeClock()),
+                            watchdogs=[])
+        mon.attach(rt, numerics_every=1)
+        assert rt.logits_probe is mon.probe
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=0, prompt=rng.integers(
+            0, cfg.vocab_size, size=5).astype(np.int32), max_new_tokens=3)]
+        rt.serve(reqs)
+        assert mon.probe.calls >= 1        # decode launches hit the probe
+        assert mon.probe.failures == 0     # real logits are finite
+        assert mon.stats()["numerics_probes"] == mon.probe.probes
+
+    def test_attach_without_numerics_leaves_probe_off(self):
+        class FakeRuntime:
+            logits_probe = None
+            def register_metrics(self, registry=None):
+                return registry
+        rt = FakeRuntime()
+        mon = self._mon()
+        mon.attach(rt)
+        assert rt.logits_probe is None and mon.probe is None
+
+
+# ======================================================================
+# Tuning drift
+# ======================================================================
+
+def _contract_event(spec, dims, dtype, dur, eager=True):
+    return {"ph": "X", "name": "contract", "cat": "core", "dur": dur,
+            "args": {"spec": spec, "dims": dims, "dtype": dtype,
+                     "eager": eager}}
+
+
+class TestDriftAnalyze:
+    def _dispatcher_with(self, entries):
+        from repro.tuning.dispatch import Dispatcher
+
+        d = Dispatcher(None, policy="cached")
+        for key, us in entries.items():
+            d.cache.put(key, {"best": "xla:auto",
+                              "results": {"xla:auto": us}})
+        return d
+
+    def test_normalized_ratio_flags_outlier(self):
+        from repro.tuning.drift import DriftDetector
+
+        # three healthy keys at a systematic 10x overhead, one at 100x
+        entries, events = {}, []
+        for i, n in enumerate((8, 16, 32, 64)):
+            key = f"ab,bc->ac|{n}x{n}x{n}|float32|cpu"
+            entries[key] = 10.0
+            live = 1000.0 if n == 64 else 100.0
+            events += [_contract_event("ab,bc->ac",
+                                       {"a": n, "b": n, "c": n},
+                                       "float32", live)] * 3
+        det = DriftDetector(self._dispatcher_with(entries), ratio=3.0)
+        rep = det.analyze(events)
+        assert rep.normalized and rep.baseline_ratio == pytest.approx(10.0)
+        assert rep.drifted == ["ab,bc->ac|64x64x64|float32|cpu"]
+        assert rep.keys[rep.drifted[0]].score == pytest.approx(10.0)
+        assert rep.drifted_frac == pytest.approx(0.25)
+
+    def test_uniform_overhead_is_not_drift(self):
+        from repro.tuning.drift import DriftDetector
+
+        entries, events = {}, []
+        for n in (8, 16, 32):
+            key = f"ab,bc->ac|{n}x{n}x{n}|float32|cpu"
+            entries[key] = 5.0
+            events += [_contract_event("ab,bc->ac",
+                                       {"a": n, "b": n, "c": n},
+                                       "float32", 250.0)] * 3
+        rep = DriftDetector(self._dispatcher_with(entries)).analyze(events)
+        # 50x overhead everywhere: normalization cancels it completely
+        assert rep.drifted == [] and len(rep.keys) == 3
+
+    def test_filters(self):
+        from repro.tuning.drift import DriftDetector
+
+        key = "ab,bc->ac|8x8x8|float32|cpu"
+        det = DriftDetector(self._dispatcher_with({key: 5.0}))
+        dims = {"a": 8, "b": 8, "c": 8}
+        events = [
+            _contract_event("ab,bc->ac", dims, "float32", 50.0, eager=False),
+            {"ph": "i", "name": "contract", "args": {}},
+            {"ph": "X", "name": "decode_batch", "cat": "runtime",
+             "dur": 9.0, "args": {}},
+            _contract_event("ab,bc->ac", dims, "float32", 50.0),
+            _contract_event("ab,bc->ac", dims, "float32", 50.0),
+        ]
+        live = det.observe(events)
+        assert live == {key: [50.0, 50.0]}   # jit span + non-contracts out
+        rep = det.analyze(events)
+        assert rep.keys == {}                # 2 samples < min_samples
+
+    def test_ratio_validation(self):
+        from repro.tuning.drift import DriftDetector
+
+        with pytest.raises(ValueError):
+            DriftDetector(self._dispatcher_with({}), ratio=1.0)
+
+
+class TestDriftEndToEnd:
+    def test_corrupt_entry_flagged_remeasured_retrained(self):
+        """The acceptance demo: corrupt one cached entry's µs so the
+        live replay looks ~20x slower than recorded, then assert the
+        drift pass flags exactly that key, evicts + re-measures it, and
+        retrains the cost model (fingerprint-driven refit)."""
+        from repro.core.notation import parse_spec
+        from repro.tuning.cache import canonical_key
+        from repro.tuning.dispatch import Dispatcher
+        from repro.tuning.drift import DriftDetector
+
+        disp = Dispatcher(None, iters=2, warmup=1)
+        rng = np.random.default_rng(0)
+        work = []
+        for s, n in (("ab,bc->ac", 16), ("ab,bc->ac", 24),
+                     ("mk,kn->mn", 32), ("abc,cd->abd", 8)):
+            cs = parse_spec(s)
+            dims = {m: n for m in set(cs.a_modes + cs.b_modes + cs.c_modes)}
+            A = jnp.asarray(rng.standard_normal(
+                [dims[m] for m in cs.a_modes]), jnp.float32)
+            B = jnp.asarray(rng.standard_normal(
+                [dims[m] for m in cs.b_modes]), jnp.float32)
+            work.append((cs, A, B))
+            disp.contract(cs, A, B)        # tune + cache the working set
+
+        cs0, A0, B0 = work[0]
+        key0 = canonical_key(cs0, {"a": 16, "b": 16, "c": 16}, jnp.float32)
+        entry = disp.cache.get(key0)
+        entry["results"] = {k: v / 20 for k, v in entry["results"].items()}
+        disp.cache.put(key0, entry)        # the "machine got slower" lie
+        model_before = disp.model()
+
+        t = trace.enable_tracing(trace.Tracer())
+        for _ in range(4):                 # serve the recorded working set
+            for cs, A, B in work:
+                disp.contract(cs, A, B)
+        served_events = list(t.events())
+
+        det = DriftDetector(disp, ratio=3.0, retrain_gate=0.2)
+        report = det.run(served_events)    # tracing stays on: verdicts land
+        trace.disable_tracing()
+
+        assert report.drifted == [key0]
+        assert report.evicted == [key0]
+        assert report.remeasured == [key0]
+        assert key0 in disp.cache          # re-tuned back in
+        fresh = disp.cache.get(key0)["results"]
+        assert all(v > entry["results"][k] * 5 for k, v in fresh.items())
+        assert report.retrained
+        assert disp.model() is not model_before
+        assert det.stats()["drifted"] == 1
+        # the verdicts are on the trace too
+        drifts = [e for e in t.events() if e["name"] == "tuning_drift"]
+        retrains = [e for e in t.events() if e["name"] == "tuning_retrain"]
+        assert len(drifts) == 1 and drifts[0]["args"]["key"] == key0
+        assert len(retrains) == 1 and retrains[0]["args"]["retrained"]
+
+    def test_cache_drop_bumps_fingerprint(self):
+        from repro.tuning.cache import TuningCache
+
+        c = TuningCache(None)
+        c.put("k|8|float32|cpu", {"best": "xla:auto",
+                                  "results": {"xla:auto": 1.0}})
+        fp = c.fingerprint()
+        assert c.drop("k|8|float32|cpu") is True
+        assert c.fingerprint() != fp
+        assert "k|8|float32|cpu" not in c
+        assert c.drop("missing") is False
+
+
+# ======================================================================
+# History ledger + regression sentinel
+# ======================================================================
+
+class TestHistory:
+    def test_append_load_roundtrip(self, tmp_path):
+        from benchmarks import history
+
+        p = str(tmp_path / "h.jsonl")
+        rec = history.append_record(
+            "obs_overhead", {"enabled_overhead_frac": 0.02},
+            quick=True, path=p, t=1.0)
+        assert rec["metrics"] == {"obs_overhead_frac": 0.02}
+        history.append_record(
+            "fig14_runtime", {"runtime": {"tok_per_s": 120.0}},
+            quick=False, path=p, t=2.0)
+        assert len(history.load_history(p)) == 2
+        assert history.load_history(p, module="fig14_runtime")[0][
+            "metrics"]["tok_per_s"] == 120.0
+        assert history.load_history(p, quick=True)[0][
+            "module"] == "obs_overhead"
+
+    def test_unknown_module_or_missing_metrics_skipped(self, tmp_path):
+        from benchmarks import history
+
+        p = str(tmp_path / "h.jsonl")
+        assert history.append_record("nope", {"x": 1}, quick=False,
+                                     path=p) is None
+        assert history.append_record("fig14_runtime", {"runtime": {}},
+                                     quick=False, path=p) is None
+        assert history.load_history(p) == []
+
+    def test_malformed_lines_skipped(self, tmp_path):
+        from benchmarks import history
+
+        p = tmp_path / "h.jsonl"
+        p.write_text('not json\n{"module": 3}\n'
+                     '{"module": "obs_overhead", "quick": true, '
+                     '"metrics": {"obs_overhead_frac": 0.01}, "t": 1}\n')
+        recs = history.load_history(str(p))
+        assert len(recs) == 1
+
+    def test_missing_file_is_empty(self, tmp_path):
+        from benchmarks import history
+
+        assert history.load_history(str(tmp_path / "none.jsonl")) == []
+
+
+class TestSentinel:
+    def _ledger(self, tmp_path, values, metric="enabled_overhead_frac",
+                module="obs_overhead", quick=True):
+        from benchmarks import history
+
+        p = str(tmp_path / "h.jsonl")
+        for i, v in enumerate(values):
+            history.append_record(module, {metric: v}, quick=quick,
+                                  path=p, t=float(i))
+        return p
+
+    def test_identical_runs_pass(self, tmp_path):
+        from benchmarks import history, sentinel
+
+        p = self._ledger(tmp_path, [0.01, 0.01])
+        verdicts = sentinel.check_history(history.load_history(p))
+        assert len(verdicts) == 1 and not verdicts[0].regressed
+        assert sentinel.main(["--history", p, "--check"]) == 0
+
+    def test_degraded_run_fails(self, tmp_path):
+        from benchmarks import history, sentinel
+
+        p = self._ledger(tmp_path, [0.01, 0.01, 0.50])
+        (v,) = sentinel.check_history(history.load_history(p))
+        assert v.regressed and v.baseline == pytest.approx(0.01)
+        assert sentinel.main(["--history", p, "--check"]) == 1
+        # without --check the verdict prints but the exit stays 0
+        assert sentinel.main(["--history", p]) == 0
+
+    def test_higher_is_better_direction(self, tmp_path):
+        from benchmarks import history, sentinel
+
+        p = str(tmp_path / "h.jsonl")
+        for i, tps in enumerate([100.0, 100.0, 60.0]):
+            history.append_record("fig14_runtime",
+                                  {"runtime": {"tok_per_s": tps}},
+                                  quick=False, path=p, t=float(i))
+        (v,) = sentinel.check_history(history.load_history(p))
+        assert v.regressed and v.worsening == pytest.approx(40.0)
+        # an *improvement* is never a regression
+        history.append_record("fig14_runtime",
+                              {"runtime": {"tok_per_s": 500.0}},
+                              quick=False, path=p, t=9.0)
+        (v2,) = sentinel.check_history(history.load_history(p))
+        assert not v2.regressed
+
+    def test_cohorts_never_cross(self, tmp_path):
+        from benchmarks import history, sentinel
+
+        p = str(tmp_path / "h.jsonl")
+        # a terrible quick number must not judge the healthy full runs
+        history.append_record("obs_overhead",
+                              {"enabled_overhead_frac": 0.90},
+                              quick=True, path=p, t=0.0)
+        for i in (1, 2):
+            history.append_record("obs_overhead",
+                                  {"enabled_overhead_frac": 0.01},
+                                  quick=False, path=p, t=float(i))
+        verdicts = sentinel.check_history(history.load_history(p))
+        assert len(verdicts) == 1
+        assert verdicts[0].quick is False and not verdicts[0].regressed
+
+    def test_rolling_window_median(self, tmp_path):
+        from benchmarks import history, sentinel
+
+        # noisy history; median of the window absorbs the spike
+        p = self._ledger(tmp_path, [0.01, 0.30, 0.01, 0.01, 0.012])
+        (v,) = sentinel.check_history(history.load_history(p), window=4)
+        assert v.baseline == pytest.approx(0.01, rel=0.1)
+        assert not v.regressed
+
+    def test_single_record_no_verdict(self, tmp_path):
+        from benchmarks import history, sentinel
+
+        p = self._ledger(tmp_path, [0.01])
+        assert sentinel.check_history(history.load_history(p)) == []
+        assert sentinel.main(["--history", p, "--check"]) == 0
+
+    def test_window_validation(self):
+        from benchmarks import sentinel
+
+        with pytest.raises(ValueError):
+            sentinel.check_history([], window=0)
+
+    def test_harness_registration(self):
+        from benchmarks import run as bench_run
+
+        assert "obs_overhead" in bench_run.MODULES
+        assert bench_run.JSON_ARTIFACTS["obs_overhead"] == "BENCH_obs.json"
+
+
+# ======================================================================
+# Registry thread-safety (S2 regression)
+# ======================================================================
+
+class TestRegistryThreadSafety:
+    def test_concurrent_counter_bumps_lose_nothing(self):
+        reg = MetricsRegistry()
+        n_threads, per_thread = 8, 2000
+        barrier = threading.Barrier(n_threads)
+
+        def worker():
+            barrier.wait()
+            for _ in range(per_thread):
+                reg.counter("ticks")
+
+        threads = [threading.Thread(target=worker)
+                   for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert reg.snapshot()["counters"]["ticks"] == n_threads * per_thread
+
+    def test_concurrent_registration_and_snapshot(self):
+        reg = MetricsRegistry()
+        stop = threading.Event()
+        errors = []
+
+        def churn():
+            i = 0
+            while not stop.is_set():
+                try:
+                    reg.register(f"s{i % 5}", lambda: {"v": 1})
+                    reg.unregister(f"s{(i + 2) % 5}")
+                except Exception as e:  # pragma: no cover
+                    errors.append(e)
+                i += 1
+
+        t = threading.Thread(target=churn)
+        t.start()
+        try:
+            for _ in range(300):
+                snap = reg.snapshot()
+                assert all(v == {"v": 1} for v in snap.values())
+        finally:
+            stop.set()
+            t.join()
+        assert errors == []

@@ -631,3 +631,92 @@ class TestRuntimeInstrumentation:
         reqs = rt.serve(self._requests(cfg, [5]))
         assert all(r.done for r in reqs)
         assert trace.get_tracer() is None
+
+
+# ======================================================================
+# Ring-drop soak: sampling + watchdogs under sustained tracer overflow
+# ======================================================================
+
+class TestRingDropSoak:
+    """Sustained sampling far past the tracer ring's capacity must keep
+    exact drop accounting, and the health layer's sample-counted windows
+    must be oblivious to tracer drops — the sampler's series rings are
+    independent state, so losing old trace events never skews a
+    watchdog's view of the last N samples."""
+
+    def test_soak_exact_drops_and_unskewed_watchdogs(self):
+        from repro.obs.health import DecodeStallWatchdog, HealthMonitor
+        from repro.obs.timeseries import MetricsSampler
+
+        clk = FakeClock()
+        tracer = trace.enable_tracing(trace.Tracer(capacity=64, clock=clk))
+        state = {"ticks": 0, "toks": 0, "done": 0}
+        reg = MetricsRegistry()
+        reg.register("serving", lambda: {
+            "ticks": state["ticks"], "tokens_out": state["toks"],
+            "requests_done": state["done"]})
+        mon = HealthMonitor(
+            MetricsSampler(reg, capacity=32, interval_s=1.0, clock=clk),
+            watchdogs=[DecodeStallWatchdog(budget=4)])
+
+        stalls = [(200, 260), (400, 470)]   # iteration spans with no tokens
+        alerts = []
+        for i in range(500):
+            clk.advance(1.0)
+            state["ticks"] += 1
+            if not any(lo <= i < hi for lo, hi in stalls):
+                state["toks"] += 2
+            # per-iteration span chatter overflows the 64-slot ring fast
+            with tracer.span("decode_batch", "runtime") as sp:
+                sp.set(i=i)
+            tracer.instant("tick", "runtime", {"i": i})
+            alerts += mon.tick()
+        trace.disable_tracing()
+
+        # --- exact tracer drop accounting at 10x+ overflow
+        per_iter = 2                        # one span + one instant
+        expected_total = 500 * per_iter + len(alerts)  # health instants too
+        assert tracer.total == expected_total
+        assert tracer.dropped == expected_total - 64
+        evs = tracer.events()
+        assert len(evs) == 64
+        seqs = [e["seq"] for e in evs]
+        assert seqs == sorted(seqs)                      # oldest-first
+        assert seqs[-1] == expected_total - 1            # newest retained
+        assert seqs[0] == expected_total - 64            # exactly capacity kept
+
+        # --- watchdog windows counted in samples, never skewed by drops:
+        # exactly one edge-triggered alert per stall episode, no phantoms
+        assert [a.name for a in alerts] == ["decode_stall", "decode_stall"]
+        assert mon.alert_counts == {"decode_stall": 2}
+        assert mon.sampler.samples == 500
+
+        # --- the sampler's own ring does its own exact accounting
+        ser = mon.sampler.get("serving.ticks")
+        assert len(ser) == 32 and ser.total == 500 and ser.dropped == 468
+        assert ser.latest() == 500.0
+        # the retained window is the *newest* 32 samples, contiguous
+        vals = ser.values()
+        assert vals == [float(v) for v in range(469, 501)]
+
+    def test_sampler_interval_under_tracer_pressure(self):
+        """Interval gating stays wall-clock-exact while the tracer ring
+        churns: ticks between samples check no watchdog and take no
+        sample."""
+        from repro.obs.health import HealthMonitor
+        from repro.obs.timeseries import MetricsSampler
+
+        clk = FakeClock()
+        trace.enable_tracing(trace.Tracer(capacity=16, clock=clk))
+        reg = MetricsRegistry()
+        reg.register("serving", lambda: {"ticks": 1})
+        mon = HealthMonitor(
+            MetricsSampler(reg, interval_s=2.0, clock=clk), watchdogs=[])
+        for i in range(100):
+            clk.advance(0.5)
+            trace.instant("noise", "runtime", i=i)
+            mon.tick()
+        trace.disable_tracing()
+        # 50s of clock at one sample per 2s (first tick samples at t+0.5)
+        assert mon.sampler.samples == 25
+        assert mon.checks == 25
